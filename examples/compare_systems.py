@@ -1,0 +1,48 @@
+"""Fig.10-style comparison: LoongServe vs vLLM-TP vs chunked prefill vs
+PD-disaggregation on the four paper workloads (SIB-clock simulation).
+
+  PYTHONPATH=src python examples/compare_systems.py [--n 80]
+"""
+import argparse
+import copy
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+from repro.configs import get_config
+from repro.data import poisson_workload
+from repro.launch.serve import build_engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=80)
+    args = ap.parse_args()
+    cfg = get_config("lwm-7b")
+    CAP = 250_000
+    systems = ["loongserve", "vllm-tp", "chunked", "pd-disagg"]
+    for ds, rate in [("sharegpt", 4.0), ("leval", 0.5), ("lveval", 0.15),
+                     ("mixed", 0.5)]:
+        reqs = poisson_workload(ds, args.n, rate, seed=7)
+        print(f"=== {ds} (rate {rate}) ===")
+        base_e2e = None
+        for name in systems:
+            eng = build_engine(name, cfg, 8, CAP)
+            for r in copy.deepcopy(reqs):
+                eng.submit(r)
+            m = eng.run().summary()
+            e2e = m.get("norm_e2e_mean", float("nan"))
+            if name == "loongserve":
+                base_e2e = e2e
+            speedup = (e2e / base_e2e) if base_e2e else float("nan")
+            print(
+                f"  {name:12s} e2e={e2e:.5f} in={m.get('norm_input_mean', 0):.5f} "
+                f"out={m.get('norm_output_mean', 0):.5f} fin={m.get('n_finished')} "
+                f"mig={m.get('reactive_migration_bytes', 0)/1e9:.1f}GB "
+                f"(loongserve is {speedup:.2f}x better)"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""ESP SPMD demo: the striped ring prefill + multi-master decode running as
+real shard_map programs on 8 host devices, validated against the dense oracle.
+
+  PYTHONPATH=src python examples/esp_spmd_demo.py
+(sets XLA_FLAGS itself — run as a fresh process)
+"""
+import os
+import pathlib
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, reduced
+from repro.core import striped
+from repro.core.esp import ESPAttnImpl
+from repro.models import attention as A
+from repro.models.transformer import DefaultAttnImpl
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = reduced(REGISTRY["glm4-9b"], n_kv_heads=2, n_heads=4, d_head=16)
+    impl = ESPAttnImpl(mesh, cfg)
+    B, S, H, KVH, D = 2, 64, 4, 2, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, D))
+
+    # --- striped ring prefill ---
+    ref = A.full_attention(q, k, v, causal=True)
+    n = 4
+    pos = striped.striped_positions(S, n)
+    with mesh:
+        out = jax.jit(
+            lambda q, k, v: impl.prefill_attn(
+                q, k, v, pos, pos, causal=True, window=None, softcap=None
+            )
+        )(striped.stripe(q, n), striped.stripe(k, n), striped.stripe(v, n))
+    err = float(jnp.max(jnp.abs(striped.unstripe(out, n) - ref)))
+    print(f"striped ring prefill vs dense oracle: max err {err:.2e}")
+
+    # --- multi-master decode ---
+    Bd, Sc = 8, 128
+    qd = jax.random.normal(key, (Bd, 1, H, D))
+    kc = jax.random.normal(jax.random.PRNGKey(3), (Bd, Sc, KVH, D))
+    vc = jax.random.normal(jax.random.PRNGKey(4), (Bd, Sc, KVH, D))
+    kn = jax.random.normal(jax.random.PRNGKey(5), (Bd, 1, KVH, D))
+    vn = jax.random.normal(jax.random.PRNGKey(6), (Bd, 1, KVH, D))
+    lens = jnp.arange(1, Bd + 1, dtype=jnp.int32) * 13 % Sc
+    refd = DefaultAttnImpl().decode_attn(qd, kc, vc, kn, vn, lens,
+                                         window=None, softcap=None)
+    with mesh:
+        outd = jax.jit(
+            lambda *a: impl.decode_attn(*a, window=None, softcap=None)
+        )(qd, kc, vc, kn, vn, lens)
+    errd = float(jnp.max(jnp.abs(outd - refd)))
+    print(f"multi-master decode vs oracle:        max err {errd:.2e}")
+    assert err < 1e-5 and errd < 1e-5
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

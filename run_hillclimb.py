@@ -1,0 +1,22 @@
+import json, sys
+from repro.launch.dryrun import run_cell
+from repro.launch import sharding as shlib
+
+results = []
+# ---- Cell A: glm4-9b x prefill_32k (paper-representative) ----
+results.append(run_cell("glm4-9b", "prefill_32k", options={"kernel_adjusted": True}))
+results.append(run_cell("glm4-9b", "prefill_32k", options={"ring_slice_tp": True}))
+results.append(run_cell("glm4-9b", "prefill_32k",
+                        options={"ring_slice_tp": True, "kernel_adjusted": True}))
+# ---- Cell B: xlstm-350m x prefill_32k (worst roofline fraction) ----
+for chunk in (128, 256, 512):
+    results.append(run_cell("xlstm-350m", "prefill_32k", options={"ssm_chunk": chunk}))
+results.append(run_cell("xlstm-350m", "prefill_32k",
+                        options={"ssm_chunk": 256, "exclude_scope": "mlstm_chunk_body"}))
+# ---- Cell C: arctic-480b x prefill_32k (most collective-bound) ----
+shlib.MOE_GROUP_C_OVER_DATA = True
+results.append(run_cell("arctic-480b", "prefill_32k",
+                        options={"moe_c_over_data": True}))
+shlib.MOE_GROUP_C_OVER_DATA = False
+json.dump(results, open("dryrun_hillclimb.json", "w"), indent=1)
+print("HILLCLIMB DONE")

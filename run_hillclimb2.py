@@ -1,0 +1,9 @@
+import json
+from repro.launch.dryrun import run_cell
+results = []
+for chunk in (128, 256, 512):
+    results.append(run_cell("xlstm-350m", "prefill_32k", options={"ssm_chunk": chunk}))
+results.append(run_cell("xlstm-350m", "prefill_32k",
+                        options={"ssm_chunk": 256, "exclude_scope": "mlstm_chunk_body"}))
+json.dump(results, open("dryrun_hillclimb2.json", "w"), indent=1)
+print("HILLCLIMB2 DONE")

@@ -1,0 +1,18 @@
+import json
+from repro.launch.dryrun import run_cell
+from repro.launch import sharding as shlib
+results = []
+# Cell A: glm4 prefill (baseline chunkless; paper-faithful + variants)
+results.append(run_cell("glm4-9b", "prefill_32k", options={"kernel_adjusted": True}))
+results.append(run_cell("glm4-9b", "prefill_32k", options={"ring_slice_tp": True}))
+# Cell B: xlstm prefill chunk sweep (baseline = 256 via config default)
+for chunk in (64, 128, 512, 1024):
+    results.append(run_cell("xlstm-350m", "prefill_32k", options={"ssm_chunk": chunk}))
+results.append(run_cell("xlstm-350m", "prefill_32k",
+                        options={"exclude_scope": "mlstm_chunk_body"}))
+# Cell C: arctic refuted variant re-measured under the new census
+shlib.MOE_GROUP_C_OVER_DATA = True
+results.append(run_cell("arctic-480b", "prefill_32k", options={"moe_c_over_data": True}))
+shlib.MOE_GROUP_C_OVER_DATA = False
+json.dump(results, open("dryrun_hillclimb3.json", "w"), indent=1)
+print("HILLCLIMB3 DONE")

@@ -1,0 +1,8 @@
+"""LoongServe-on-JAX: elastic sequence parallelism for long-context LLM
+serving, reproduced as a production-grade TPU framework.
+
+Paper: Wu et al., "LoongServe: Efficiently Serving Long-Context Large
+Language Models with Elastic Sequence Parallelism" (2024).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Baseline serving systems on the shared engine substrate (§7 comparison)."""
+from repro.baselines.static_tp import StaticTPEngine  # noqa: F401
+from repro.baselines.chunked_prefill import ChunkedPrefillEngine  # noqa: F401
+from repro.baselines.pd_disagg import PDDisaggEngine  # noqa: F401
+from repro.baselines.fixed_groups import FixedGroupsEngine  # noqa: F401

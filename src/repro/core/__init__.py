@@ -1,0 +1,3 @@
+"""ESP core: striped ring prefill, multi-master decode, SP recurrent handoff."""
+from repro.core.esp import ESPAttnImpl  # noqa: F401
+from repro.core import striped  # noqa: F401

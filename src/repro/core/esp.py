@@ -1,0 +1,317 @@
+"""Elastic Sequence Parallelism: the SPMD production path (LoongServe §4).
+
+`ESPAttnImpl` plugs into the model builders and replaces local attention with:
+
+  * prefill: striped-attention ring over the `sp` mesh axis (between elastic
+    instances). Each rank holds one sequence stripe; at every ring step it
+    computes a flash-style *partial* against the KV stripe it currently holds
+    and `ppermute`s the stripe to its ring neighbour — n steps make every
+    query meet every key with zero redundant compute. Masks/RoPE are
+    position-based so the striped permutation is exact.
+  * decode: multi-master distributed decode. The KV cache is sharded across
+    instances at token granularity; masters (batch shards over `sp`) compute
+    q and the new token's KV locally, q is all-gathered (the paper's "send
+    query tensors"), every rank computes a partial over its local KV shard,
+    and partials are combined with an LSE-weighted reduce-scatter back to the
+    masters — which then run their own FFN shard (multi-master == batch-
+    sharded local layers).
+
+Two head-sharding modes per DESIGN.md §3:
+  * heads mode (n_heads % tp == 0): q heads shard over `tp`; KV heads shard
+    too when divisible, otherwise each rank dynamic-slices the KV heads its
+    q-head block needs (GQA group-aligned).
+  * batch mode (odd head counts: qwen 20H, arctic 56H, whisper 6H): the
+    attention batch shards over `tp` instead; heads stay whole.
+
+The ring degree (DoP) can be the whole `sp` axis or disjoint subgroups of it
+(`dop=`), matching LoongServe's iteration-level ESP groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import striped
+from repro.models import attention as A
+from repro.models import ssm, xlstm
+from repro.models.transformer import DefaultAttnImpl
+
+
+def _shmap(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+
+
+def _slice_kv_heads(k, v, tp_idx, h_local: int, q_per_kv: int):
+    """Select the KV heads a rank's q-head block needs when KV is replicated
+    across tp. Requires blocks not to straddle KV groups (q_per_kv % h_local
+    == 0 or h_local % q_per_kv == 0) — true for every assigned arch."""
+    if h_local >= q_per_kv:
+        n_loc = h_local // q_per_kv
+        start = tp_idx * n_loc
+    else:
+        n_loc = 1
+        start = (tp_idx * h_local) // q_per_kv
+    k = lax.dynamic_slice_in_dim(k, start, n_loc, axis=2)
+    v = lax.dynamic_slice_in_dim(v, start, n_loc, axis=2)
+    return k, v
+
+
+class ESPAttnImpl(DefaultAttnImpl):
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: ModelConfig,
+        *,
+        sp_axis: str = "data",
+        tp_axis: Optional[str] = "model",
+        dop: Optional[int] = None,
+        force_batch_mode: bool = False,
+        ring_slice_tp: bool = False,
+        interpret: bool = False,
+    ):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.sp = sp_axis
+        self.tp = tp_axis if (tp_axis and tp_axis in mesh.axis_names) else None
+        self.n_sp = mesh.shape[sp_axis]
+        self.n_tp = mesh.shape[self.tp] if self.tp else 1
+        self.dop = dop or self.n_sp
+        assert self.n_sp % self.dop == 0
+        # prefill head sharding mode. Hybrid/ssm archs force batch mode so
+        # attention sharding matches the recurrent layers' (batch-over-tp)
+        # activation layout with no per-layer reshard.
+        self.heads_mode = (
+            not force_batch_mode
+            and (self.n_tp == 1 or cfg.n_heads % self.n_tp == 0)
+        )
+        self.kv_div = cfg.n_kv_heads % self.n_tp == 0 if self.n_tp > 1 else True
+        # decode KV sharding mode (mode1: heads over tp; mode2: seq over both)
+        self.decode_heads_mode = (
+            not force_batch_mode
+            and (
+                self.n_tp == 1
+                or (cfg.n_kv_heads % self.n_tp == 0 and cfg.n_heads % self.n_tp == 0)
+            )
+        )
+        # beyond-paper (§Perf A2): when KV heads are replicated across tp
+        # (GQA kv < tp), the naive ring circulates the SAME stripe on every
+        # tp rank (tp-fold redundant ICI traffic). slice-ring sends each tp
+        # rank 1/tp of the stripe's tokens and all-gathers locally after
+        # receive — ring-leg traffic drops by tp.
+        self.ring_slice_tp = ring_slice_tp
+        self.interpret = interpret
+
+    # ---------------------------------------------------------------- prefill
+    def prefill_attn(self, q, k, v, q_pos, k_pos, *, causal, window, softcap):
+        """q [B,S,H,D] in the (striped) layout matching q_pos; S shards over
+        sp as the stripes. Returns [B,S,H,D]."""
+        n_sp, tp = self.n_sp, self.tp
+        if n_sp == 1:
+            return super().prefill_attn(
+                q, k, v, q_pos, k_pos, causal=causal, window=window, softcap=softcap
+            )
+        h_local = self.cfg.n_heads // self.n_tp if (self.heads_mode and tp) else self.cfg.n_heads
+        q_per_kv = self.cfg.q_per_kv
+        slice_kv = self.heads_mode and tp and not self.kv_div
+        pairs = striped.ring_pairs(n_sp, self.dop)
+        ring_len = self.dop
+        sp = self.sp
+
+        slice_ring = (
+            self.ring_slice_tp and tp and self.n_tp > 1
+            and (not self.kv_div or not self.heads_mode)
+        )
+        n_tp = self.n_tp
+        # ranks holding IDENTICAL kv tensors form the de-dup group: all tp
+        # ranks in batch mode; the q_per_kv/h_local block in heads mode
+        if slice_ring and self.heads_mode and slice_kv:
+            ring_group = max(q_per_kv // h_local, 1)
+        else:
+            ring_group = n_tp
+        if slice_ring and ring_group < 2:
+            slice_ring = False
+        ag_groups = [
+            [b * ring_group + i for i in range(ring_group)]
+            for b in range(n_tp // ring_group)
+        ] if slice_ring else None
+
+        def body(qb, kb, vb, qp, kp):
+            if slice_kv:
+                kb, vb = _slice_kv_heads(
+                    kb, vb, lax.axis_index(tp), h_local, q_per_kv
+                )
+            if qp.ndim > 1:  # squeeze leading sharded dummy dims
+                qp, kp = qp.reshape(-1), kp.reshape(-1)
+            acc = None
+            kv_pos = kp
+            kk, vv = kb, vb
+            s_l = kb.shape[1]
+            for step in range(ring_len):
+                mask = A.mask_from_positions(
+                    qp, kv_pos, causal=causal, window=window
+                )
+                part = A.partial_attention(qb, kk, vv, mask, softcap=softcap)
+                acc = part if acc is None else A.merge_partial(acc, part)
+                if step < ring_len - 1:
+                    if slice_ring:
+                        # A2 slice-ring: each rank of the de-dup group
+                        # forwards only its 1/g token slice; receivers
+                        # re-gather within the group.
+                        tidx = lax.axis_index(tp) % ring_group
+                        per = s_l // ring_group
+                        ks = lax.dynamic_slice_in_dim(kk, tidx * per, per, 1)
+                        vs = lax.dynamic_slice_in_dim(vv, tidx * per, per, 1)
+                        ks, vs, kv_pos = lax.ppermute((ks, vs, kv_pos), sp, pairs)
+                        kk = lax.all_gather(
+                            ks, tp, axis=1, tiled=True,
+                            axis_index_groups=ag_groups,
+                        )
+                        vv = lax.all_gather(
+                            vs, tp, axis=1, tiled=True,
+                            axis_index_groups=ag_groups,
+                        )
+                    else:
+                        kk, vv, kv_pos = lax.ppermute(
+                            (kk, vv, kv_pos), sp, pairs
+                        )
+            return A.finalize_partial(acc).astype(qb.dtype)
+
+        if self.heads_mode:
+            q_spec = P(None, sp, tp, None)
+            kv_spec = P(None, sp, tp if (tp and self.kv_div) else None, None)
+        else:  # batch mode: batch over tp (replicated if not divisible)
+            btp = tp if (tp and q.shape[0] % self.n_tp == 0) else None
+            q_spec = P(btp, sp, None, None)
+            kv_spec = P(btp, sp, None, None)
+        pos_spec = P(sp)
+        fn = _shmap(
+            body,
+            self.mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, pos_spec, pos_spec),
+            out_specs=q_spec,
+        )
+        q_pos = jnp.broadcast_to(jnp.asarray(q_pos), (q.shape[1],))
+        k_pos = jnp.broadcast_to(jnp.asarray(k_pos), (k.shape[1],))
+        return fn(q, k, v, q_pos, k_pos)
+
+    # ---------------------------------------------------------------- decode
+    def decode_attn(self, q, k_cache, v_cache, k_new, v_new, cache_len, *,
+                    window, softcap):
+        """Multi-master distributed decode (LoongServe §4.2).
+
+        q [B,1,H,D]; caches [B,S,KVH,D] sharded over sp (and tp in mode2) on
+        the sequence dim; k_new/v_new [B,1,KVH,D] live with the masters."""
+        n_sp, tp, sp = self.n_sp, self.tp, self.sp
+        if n_sp == 1 and self.n_tp == 1:
+            return super().decode_attn(
+                q, k_cache, v_cache, k_new, v_new, cache_len,
+                window=window, softcap=softcap,
+            )
+        b = q.shape[0]
+        multi_master = b % n_sp == 0 and b >= n_sp
+        heads_mode = self.decode_heads_mode
+        h_local = self.cfg.n_heads // self.n_tp if (heads_mode and tp) else self.cfg.n_heads
+        n_tp = self.n_tp
+
+        def body(qb, kb, vb, knb, vnb, cl):
+            # --- local KV shard positions ---
+            s_l = kb.shape[1]
+            if heads_mode:
+                lin = lax.axis_index(sp)
+            else:
+                lin = lax.axis_index(sp) * n_tp + (lax.axis_index(tp) if tp else 0)
+            off = lin * s_l
+            pos = off + jnp.arange(s_l)
+            # --- gather queries from masters (the q broadcast) ---
+            if multi_master:
+                qg = lax.all_gather(qb, sp, axis=0, tiled=True)  # [B,1,h,D]
+            else:
+                qg = qb
+            valid = pos[None, :] < cl[:, None]
+            qpos = cl[:, None]
+            mask = A.mask_from_positions(
+                qpos, jnp.broadcast_to(pos, (b, s_l)), causal=True,
+                window=window, k_valid=valid,
+            )
+            part = A.partial_attention(qg, kb, vb, mask, softcap=softcap)
+            # --- LSE-weighted combine across KV shards ---
+            axes = (sp,) if heads_mode else ((sp, tp) if tp else (sp,))
+            m_g = lax.pmax(part.m, axes)
+            m_safe = jnp.where(jnp.isinf(m_g), 0.0, m_g)
+            w = jnp.where(jnp.isinf(part.m), 0.0, jnp.exp(part.m - m_safe))
+            o_w = part.o * w[..., None]
+            l_w = part.l * w
+            if not heads_mode and tp:
+                o_w = lax.psum(o_w, tp)
+                l_w = lax.psum(l_w, tp)
+            if multi_master:
+                # reduce-scatter back to masters (batch shards over sp)
+                o_s = lax.psum_scatter(o_w, sp, scatter_dimension=0, tiled=True)
+                l_s = lax.psum_scatter(l_w, sp, scatter_dimension=0, tiled=True)
+                b_l = b // n_sp
+                m_s = lax.dynamic_slice_in_dim(
+                    m_g, lax.axis_index(sp) * b_l, b_l, axis=0
+                )
+            else:
+                o_s = lax.psum(o_w, sp)
+                l_s = lax.psum(l_w, sp)
+                m_s = m_g
+            # --- merge the master-local new-token KV partial ---
+            if heads_mode and tp and not self.kv_div:
+                knb, vnb = _slice_kv_heads(
+                    knb, vnb, lax.axis_index(tp), h_local, self.cfg.q_per_kv
+                )
+            p_new = A.partial_attention(qb, knb, vnb, None, softcap=softcap)
+            merged = A.merge_partial(A.Partial(o_s, m_s, l_s), p_new)
+            return A.finalize_partial(merged).astype(qb.dtype)
+
+        bspec = sp if multi_master else None
+        if heads_mode:
+            q_spec = P(bspec, None, tp, None)
+            kv_spec = P(None, sp, tp, None)
+            new_spec = P(bspec, None, tp if self.kv_div else None, None)
+        else:
+            q_spec = P(bspec, None, None, None)
+            kv_spec = P(None, (sp, tp) if tp else sp, None, None)
+            new_spec = P(bspec, None, None, None)
+        fn = _shmap(
+            body,
+            self.mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, new_spec, new_spec, P(None)),
+            out_specs=q_spec,
+        )
+        cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+        return fn(q, k_cache, v_cache, k_new, v_new, cl)
+
+    # ------------------------------------------------------------ recurrent
+    def ssm_scan(self, kind, p, x, cfg, state):
+        """Sequence-parallel recurrent layers (hybrid/ssm archs).
+
+        Mamba2/mLSTM use the 3-phase chunk-state handoff (local state-only
+        fold -> log-step exclusive device scan -> local pass with the true
+        incoming state). sLSTM is inherently sequential (xLSTM paper §2.3):
+        we all-gather its input and scan redundantly, slicing the local part.
+        These run on the *contiguous* (non-striped) layout; see
+        DESIGN.md §Arch-applicability.
+        """
+        if self.n_sp == 1:
+            return super().ssm_scan(kind, p, x, cfg, state)
+        from repro.core import ssm_sp
+
+        fns = {
+            "mamba": ssm_sp.mamba2_forward_sp,
+            "mlstm": ssm_sp.mlstm_forward_sp,
+            "slstm": ssm_sp.slstm_forward_sp,
+        }
+        return fns[kind](
+            self.mesh, self.sp, p, x, cfg, state, tp=self.tp,
+            interpret=self.interpret,
+        )

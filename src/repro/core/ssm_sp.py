@@ -1,0 +1,218 @@
+"""Sequence parallelism for recurrent layers (hybrid zamba2 / xlstm archs).
+
+ESP's striped KV ring is inapplicable to recurrent state (DESIGN.md §4); the
+analogue implemented here is a 3-phase chunk-state handoff on the *contiguous*
+layout:
+
+  1. local state-only fold: each rank folds its sequence segment into a
+     single (state, decay) summary from zero init — cheap (skips output math);
+  2. log-step exclusive device scan over the `sp` axis (Hillis-Steele with
+     ppermute) under the layer's state monoid (SSD: linear decay; mLSTM:
+     max-stabilized log-space);
+  3. local full pass seeded with the true incoming state.
+
+sLSTM is inherently sequential (xLSTM §2.3): its input is all-gathered and the
+scalar recurrence runs redundantly per rank (cheap — no matmuls in the scan),
+each rank keeping its local slice.
+
+Batch shards over `tp` when divisible (recurrent layers are batch-parallel);
+weights stay replicated — recurrent-layer TP alternatives are a §Perf lever.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers, ssm, xlstm
+
+
+def _shmap(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )
+
+
+def _shift_pairs(n: int, shift: int = 1):
+    return [(i, i + shift) for i in range(n - shift)]
+
+
+def _select_last(x, sp, n, reduce="sum"):
+    """Replicate the last rank's value to every rank."""
+    idx = lax.axis_index(sp)
+    if reduce == "max":
+        return lax.pmax(jnp.where(idx == n - 1, x, -jnp.inf), sp)
+    return lax.psum(jnp.where(idx == n - 1, x, jnp.zeros_like(x)), sp)
+
+
+def _ssd_device_exclusive_scan(h_seg, d_seg, sp, n):
+    """Exclusive scan of (decay, state) pairs over the sp axis. Returns the
+    state entering each rank (zeros at rank 0). Hillis-Steele: log2(n) steps."""
+    h, d = h_seg, d_seg
+    shift = 1
+    while shift < n:
+        hr = lax.ppermute(h, sp, _shift_pairs(n, shift))
+        dr = lax.ppermute(d, sp, _shift_pairs(n, shift))
+        has = lax.axis_index(sp) >= shift
+        dr = jnp.where(has, dr, 1.0)  # ppermute zero-fills; decay identity=1
+        h = jnp.where(has[..., None, None, None],
+                      hr * d[:, :, None, None] + h, h)
+        d = jnp.where(has, dr * d, d)
+        shift *= 2
+    # exclusive = inclusive shifted right by one rank
+    h_excl = lax.ppermute(h, sp, _shift_pairs(n, 1))
+    return jnp.where(lax.axis_index(sp) >= 1, h_excl, jnp.zeros_like(h_excl))
+
+
+def _mlstm_device_exclusive_scan(st: xlstm.MLSTMState, btot, sp, n):
+    """Same, under the mLSTM max-stabilized monoid."""
+    c, nn, m, b = st.c, st.n, st.m, btot
+    shift = 1
+    while shift < n:
+        cr = lax.ppermute(c, sp, _shift_pairs(n, shift))
+        nr = lax.ppermute(nn, sp, _shift_pairs(n, shift))
+        mr = lax.ppermute(m, sp, _shift_pairs(n, shift))
+        br = lax.ppermute(b, sp, _shift_pairs(n, shift))
+        has = lax.axis_index(sp) >= shift
+        mr = jnp.where(has, mr, -jnp.inf)  # identity
+        br = jnp.where(has, br, 0.0)
+        comb = xlstm.mlstm_combine_states(
+            xlstm.MLSTMState(cr, nr, mr), xlstm.MLSTMState(c, nn, m), b
+        )
+        c = jnp.where(has[..., None, None, None], comb.c, c)
+        nn = jnp.where(has[..., None, None], comb.n, nn)
+        m = jnp.where(has[..., None], comb.m, m)
+        b = jnp.where(has, br + b, b)
+        shift *= 2
+    cr = lax.ppermute(c, sp, _shift_pairs(n, 1))
+    nr = lax.ppermute(nn, sp, _shift_pairs(n, 1))
+    mr = lax.ppermute(m, sp, _shift_pairs(n, 1))
+    first = lax.axis_index(sp) < 1
+    return xlstm.MLSTMState(
+        c=jnp.where(first[..., None, None, None], jnp.zeros_like(cr), cr),
+        n=jnp.where(first[..., None, None], jnp.zeros_like(nr), nr),
+        m=jnp.where(first[..., None], jnp.full_like(mr, -jnp.inf), mr),
+    )
+
+
+def _batch_axis(mesh, tp, batch):
+    if tp and tp in mesh.axis_names and batch % mesh.shape[tp] == 0:
+        return tp
+    return None
+
+
+# ===================================================================== mamba
+
+
+def mamba2_forward_sp(mesh, sp, p, x, cfg, state, *, tp=None, interpret=False):
+    """x [B, S(global), d] contiguous layout, sharded S over sp. Returns
+    (y, SSMState) with the state replicated (the true global final state)."""
+    assert state is None, "SP prefill starts from a fresh state"
+    n = mesh.shape[sp]
+    btp = _batch_axis(mesh, tp, x.shape[0])
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+
+    def body(xb, pp):
+        zxbcdt = jnp.einsum("btd,de->bte", xb, pp["w_in"])
+        z, xs_, b_, c_, dt = ssm._split_proj(pp, zxbcdt, d_in, cfg.ssm_state, n_heads)
+        xbc = jnp.concatenate([xs_, b_, c_], axis=-1)
+        # conv handoff: receive the left neighbour's tail (zeros at rank 0)
+        w = pp["conv_w"].shape[0]
+        tail = xbc[:, xbc.shape[1] - (w - 1):, :]
+        recv = lax.ppermute(tail, sp, _shift_pairs(n, 1))
+        xbc, my_tail = ssm._causal_conv(xbc, pp["conv_w"], pp["conv_b"], recv)
+        xs_ = xbc[..., :d_in]
+        b_ = xbc[..., d_in : d_in + cfg.ssm_state]
+        c_ = xbc[..., d_in + cfg.ssm_state :]
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + pp["dt_bias"][None, None, :])
+        a = -jnp.exp(pp["A_log"])
+        xh = xs_.reshape(*xs_.shape[:2], n_heads, cfg.ssm_head_dim)
+        # 3-phase handoff
+        h_seg, d_seg = ssm.ssd_state_only(xh, dt, a, b_, cfg.ssm_chunk)
+        h_in = _ssd_device_exclusive_scan(h_seg, d_seg, sp, n)
+        y, h_fin = ssm.ssd_chunk_scan(xh, dt, a, b_, c_, cfg.ssm_chunk, h_in)
+        y = y + xh.astype(jnp.float32) * pp["D"][None, None, :, None]
+        y = y.reshape(*xs_.shape[:2], d_in).astype(xb.dtype)
+        y = ssm._gated_norm(y, z, pp["norm_scale"])
+        out = jnp.einsum("bte,ed->btd", y, pp["w_out"])
+        h_last = _select_last(h_fin, sp, n)
+        conv_last = _select_last(my_tail.astype(jnp.float32), sp, n)
+        return out, h_last, conv_last
+
+    fn = _shmap(
+        body, mesh,
+        in_specs=(P(btp, sp, None), P()),
+        out_specs=(P(btp, sp, None), P(btp), P(btp)),
+    )
+    out, h_last, conv_last = fn(x, p)
+    return out, ssm.SSMState(h=h_last, conv=conv_last)
+
+
+# ===================================================================== mlstm
+
+
+def mlstm_forward_sp(mesh, sp, p, x, cfg, state, *, tp=None, interpret=False):
+    assert state is None, "SP prefill starts from a fresh state"
+    n = mesh.shape[sp]
+    btp = _batch_axis(mesh, tp, x.shape[0])
+    chunk = min(cfg.ssm_chunk or 64, max(x.shape[1] // n, 1))
+
+    def body(xb, pp):
+        q, k, v, o, ig, fg, z, dh = xlstm._mlstm_qkvif(pp, xb, cfg)
+        seg, btot = xlstm.mlstm_state_only(k, v, ig, fg, chunk)
+        st_in = _mlstm_device_exclusive_scan(seg, btot, sp, n)
+        htilde, st_fin = xlstm.mlstm_chunkwise(q, k, v, ig, fg, chunk, st_in)
+        h = htilde.reshape(*xb.shape[:2], -1) * o
+        h = h * jax.nn.silu(z)
+        out = jnp.einsum("bte,ed->btd", h, pp["w_down"])
+        st_last = xlstm.MLSTMState(
+            c=_select_last(st_fin.c, sp, n),
+            n=_select_last(st_fin.n, sp, n),
+            m=_select_last(st_fin.m, sp, n, reduce="max"),
+        )
+        return out, st_last
+
+    fn = _shmap(
+        body, mesh,
+        in_specs=(P(btp, sp, None), P()),
+        out_specs=(P(btp, sp, None), xlstm.MLSTMState(P(btp), P(btp), P(btp))),
+    )
+    return fn(x, p)
+
+
+# ===================================================================== slstm
+
+
+def slstm_forward_sp(mesh, sp, p, x, cfg, state, *, tp=None, interpret=False):
+    assert state is None, "SP prefill starts from a fresh state"
+    n = mesh.shape[sp]
+    btp = _batch_axis(mesh, tp, x.shape[0])
+    d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+
+    def body(xb, pp):
+        up = jnp.einsum("btd,de->bte", xb, pp["w_up"])
+        xm, z = up[..., :d_in], up[..., d_in:]
+        xm_full = lax.all_gather(xm, sp, axis=1, tiled=True)  # [B, S, d_in]
+        st0 = xlstm.init_slstm_state(cfg, xb.shape[0])
+        h_full, st = xlstm.slstm_scan(pp, xm_full, cfg, st0)
+        s_l = xm.shape[1]
+        h_loc = lax.dynamic_slice_in_dim(
+            h_full, lax.axis_index(sp) * s_l, s_l, axis=1
+        )
+        h = h_loc * jax.nn.silu(z)
+        out = jnp.einsum("bte,ed->btd", h, pp["w_down"])
+        return out, st
+
+    fn = _shmap(
+        body, mesh,
+        in_specs=(P(btp, sp, None), P()),
+        out_specs=(
+            P(btp, sp, None),
+            xlstm.SLSTMState(P(btp), P(btp), P(btp), P(btp)),
+        ),
+    )
+    return fn(x, p)

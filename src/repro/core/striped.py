@@ -1,0 +1,64 @@
+"""Striped sequence permutation (Striped Attention, Brandon et al. 2023).
+
+Token t of the original sequence is assigned to SP rank (t mod n) at local
+offset (t div n). Striping balances causal-mask work across ranks: at every
+ring step each rank computes an (almost) equal number of unmasked entries,
+unlike contiguous Ring Attention blocks where rank 0 is mostly masked.
+
+All model math is position-based (RoPE, masks), so running the model on the
+permuted layout with the matching `positions` array is exact.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def stripe_indices(seq_len: int, n: int) -> np.ndarray:
+    """perm[i] = original index of the i-th token in striped layout.
+
+    Striped layout = concat of per-rank stripes: rank r holds original
+    tokens [r, r+n, r+2n, ...]. seq_len must be divisible by n.
+    """
+    assert seq_len % n == 0, (seq_len, n)
+    local = seq_len // n
+    idx = np.arange(seq_len).reshape(local, n).T.reshape(-1)  # [n*local]
+    return idx
+
+
+def unstripe_indices(seq_len: int, n: int) -> np.ndarray:
+    """inv[j] = position in striped layout of original token j."""
+    perm = stripe_indices(seq_len, n)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(seq_len)
+    return inv
+
+
+def stripe(x: jnp.ndarray, n: int, axis: int = 1) -> jnp.ndarray:
+    """Permute `axis` of x into striped layout."""
+    idx = stripe_indices(x.shape[axis], n)
+    return jnp.take(x, jnp.asarray(idx), axis=axis)
+
+
+def unstripe(x: jnp.ndarray, n: int, axis: int = 1) -> jnp.ndarray:
+    idx = unstripe_indices(x.shape[axis], n)
+    return jnp.take(x, jnp.asarray(idx), axis=axis)
+
+
+def striped_positions(seq_len: int, n: int, offset: int = 0) -> jnp.ndarray:
+    """Global positions of tokens in the striped layout ([S] int32)."""
+    return jnp.asarray(stripe_indices(seq_len, n) + offset, jnp.int32)
+
+
+def ring_pairs(n: int, group: int | None = None) -> list[Tuple[int, int]]:
+    """(src, dst) ppermute pairs for a ring; optionally rings within disjoint
+    subgroups of size `group` (elastic ESP groups sharing one mesh axis)."""
+    g = group or n
+    assert n % g == 0
+    pairs = []
+    for base in range(0, n, g):
+        for i in range(g):
+            pairs.append((base + i, base + (i + 1) % g))
+    return pairs

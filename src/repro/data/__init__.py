@@ -1,0 +1,2 @@
+"""Synthetic workload generation (paper §7.1 datasets + Poisson arrivals)."""
+from repro.data.workload import poisson_workload, zipf_workload, sample_lengths, with_prompts  # noqa: F401

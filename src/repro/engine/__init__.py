@@ -1,0 +1,2 @@
+"""Serving engine: elastic instances, request lifecycle, iteration loop."""
+from repro.engine.request import Request, Phase  # noqa: F401

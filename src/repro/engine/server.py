@@ -1,0 +1,510 @@
+"""Serving engines: event-driven iteration loop over elastic instances.
+
+`BaseServingEngine` owns the clock, the event queue, the distributed KV pool,
+the SIB and metrics; `LoongServeEngine` drives it with the four-step global
+manager (ESP). Baselines (repro.baselines) subclass the same loop so the
+comparison is apples-to-apples: identical cost model, pool accounting and
+request lifecycle — only the policy differs.
+
+Two compute modes:
+  * sim  — tokens are synthetic; iteration durations come from the SIB
+           analytical model (the paper's own scheduling signal). This scales
+           to paper-sized workloads (Fig. 10-12) on CPU.
+  * real — a reduced model actually prefills/decodes on CPU; KV tensors flow
+           through the pools exactly as the plans dictate (used by tests and
+           the runnable examples; also the source of SIB profiles).
+
+Fault tolerance: `fail_instance` drops an instance and its KV shards —
+affected decode requests are re-queued for prefill recompute; `join_instance`
+adds fresh capacity; `checkpoint`/`restore` snapshot the full serving state.
+Elasticity is the recovery mechanism (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.engine.request import Phase, Request
+from repro.kvcache.distributed import DistributedKVPool
+from repro.kvcache.pool import OutOfSlots
+from repro.manager.scheduler import (
+    DecodeBatch,
+    GlobalManager,
+    ManagerConfig,
+    PrefillBatch,
+)
+from repro.manager.sib import SIB, HardwareSpec
+
+
+@dataclass
+class EngineMetrics:
+    finished: List[Request] = field(default_factory=list)
+    rejected: int = 0
+    scaling_migration_bytes: int = 0  # ESP transitions: MUST stay 0
+    reactive_migration_bytes: int = 0
+    q_broadcast_bytes: int = 0
+    prefill_iters: int = 0
+    decode_iters: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        fin = [r for r in self.finished if r.finish_time is not None]
+        out: Dict[str, float] = {
+            "n_finished": len(fin),
+            "rejected": self.rejected,
+            "scaling_migration_bytes": self.scaling_migration_bytes,
+            "reactive_migration_bytes": self.reactive_migration_bytes,
+            "prefill_iters": self.prefill_iters,
+            "decode_iters": self.decode_iters,
+        }
+        if fin:
+            for name, fn in [
+                ("norm_e2e", lambda r: r.norm_e2e_latency()),
+                ("norm_input", lambda r: r.norm_input_latency()),
+                ("norm_output", lambda r: r.norm_output_latency()),
+            ]:
+                vals = [fn(r) for r in fin if fn(r) is not None]
+                if vals:
+                    out[f"{name}_mean"] = float(np.mean(vals))
+                    out[f"{name}_p90"] = float(np.percentile(vals, 90))
+            span = max(r.finish_time for r in fin) - min(r.arrival for r in fin)
+            toks = sum(r.seq_len for r in fin)
+            out["throughput_tok_s"] = toks / max(span, 1e-9)
+        return out
+
+
+_event_seq = itertools.count()
+
+
+class BaseServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_instances: int,
+        capacity_per_instance: int,
+        *,
+        hw: Optional[HardwareSpec] = None,
+        store_values: bool = False,
+        model=None,
+        params=None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.n = n_instances
+        self.capacity = capacity_per_instance
+        self.pool = DistributedKVPool(cfg, n_instances, capacity_per_instance,
+                                      store_values)
+        self.sib = SIB(cfg, hw)
+        self.clock = 0.0
+        self.pending: List[Request] = []
+        self.events: List[Tuple[float, int, str, Any]] = []
+        self.busy_until: Dict[int, float] = {i: 0.0 for i in range(n_instances)}
+        self.failed: Set[int] = set()
+        self.metrics = EngineMetrics()
+        self.model = model
+        self.params = params
+        self.real = model is not None
+        self.rng = np.random.default_rng(seed)
+        self._req_index: Dict[int, Request] = {}
+
+    # ----------------------------------------------------------- submission
+    def submit(self, req: Request, at: Optional[float] = None) -> None:
+        t = req.arrival if at is None else at
+        req.arrival = t
+        cap_total = self.capacity * (self.n - len(self.failed))
+        if req.max_total_len > cap_total:
+            self.metrics.rejected += 1
+            return
+        self._push(t, "arrival", req)
+        self._req_index[req.rid] = req
+
+    def _push(self, t: float, kind: str, payload: Any) -> None:
+        heapq.heappush(self.events, (t, next(_event_seq), kind, payload))
+
+    # ------------------------------------------------------------ main loop
+    def run(self, max_time: float = float("inf"), max_events: int = 2_000_000):
+        n_ev = 0
+        while self.events and n_ev < max_events:
+            t, seq, kind, payload = heapq.heappop(self.events)
+            if t > max_time:
+                # keep the event for a later run()/restore
+                heapq.heappush(self.events, (t, seq, kind, payload))
+                break
+            self.clock = max(self.clock, t)
+            self._handle(kind, payload)
+            n_ev += 1
+        return self.metrics
+
+    def _handle(self, kind: str, payload: Any) -> None:
+        if kind == "arrival":
+            self.pending.append(payload)
+            payload.phase = Phase.PENDING
+        elif kind == "prefill_done":
+            self._on_prefill_done(payload)
+        elif kind == "decode_done":
+            self._on_decode_done(payload)
+        elif kind == "fail":
+            self._apply_failure(payload)
+        elif kind == "join":
+            self._apply_join(payload)
+        self._try_schedule()
+
+    # hooks ------------------------------------------------------------
+    def _try_schedule(self) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def _on_prefill_done(self, batch) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def _on_decode_done(self, batch) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- helpers
+    def idle_instances(self) -> List[int]:
+        return [
+            i
+            for i in range(self.n)
+            if i not in self.failed and self.busy_until[i] <= self.clock + 1e-12
+        ]
+
+    def _occupy(self, instances: Sequence[int], until: float) -> None:
+        for i in instances:
+            self.busy_until[i] = until
+
+    def _finish_request(self, req: Request) -> None:
+        req.phase = Phase.FINISHED
+        req.finish_time = self.clock
+        self.pool.free_request(req.rid)
+        self.metrics.finished.append(req)
+
+    def _sample_token(self, logits=None) -> int:
+        if logits is None:
+            return int(self.rng.integers(0, self.cfg.vocab_size))
+        return int(np.argmax(logits))
+
+    # -------------------------------------------------- fault tolerance API
+    def fail_instance(self, inst: int, at: Optional[float] = None) -> None:
+        self._push(at if at is not None else self.clock, "fail", inst)
+
+    def join_instance(self, inst: int, at: Optional[float] = None) -> None:
+        self._push(at if at is not None else self.clock, "join", inst)
+
+    def _apply_failure(self, inst: int) -> None:
+        self.failed.add(inst)
+        self.busy_until[inst] = float("inf")
+        # KV shards on the instance are lost: re-queue affected requests for
+        # prefill recompute (generated prefix becomes part of the new prompt).
+        affected = list(self.pool.pools[inst].requests())
+        for rid in affected:
+            req = self._req_index.get(rid)
+            self.pool.free_request(rid)
+            if req is None or req.phase in (Phase.FINISHED,):
+                continue
+            req.n_evictions += 1
+            req.phase = Phase.PENDING
+            req.input_len = req.seq_len  # recompute over everything so far
+            req.prefill_end = None
+            if req not in self.pending:
+                self.pending.append(req)
+        self._drop_request_state(affected)
+
+    def _apply_join(self, inst: int) -> None:
+        if inst in self.failed:
+            self.failed.discard(inst)
+            self.busy_until[inst] = self.clock
+        elif inst >= self.n:  # truly new instance: grow the registry
+            for j in range(self.n, inst + 1):
+                self.pool.pools.append(
+                    type(self.pool.pools[0])(
+                        self.cfg, self.capacity, j, self.pool.pools[0].store_values
+                    )
+                )
+                self.busy_until[j] = self.clock
+            self.n = inst + 1
+
+    def _drop_request_state(self, rids: Sequence[int]) -> None:
+        """Subclasses drop any per-request runtime state for re-queued rids."""
+
+    # ------------------------------------------------------- checkpointing
+    def checkpoint(self, path: str) -> None:
+        state = {
+            "clock": self.clock,
+            "pending": self.pending,
+            "events": self.events,
+            "busy_until": self.busy_until,
+            "failed": self.failed,
+            "metrics": self.metrics,
+            "req_index": self._req_index,
+            "pool_slots": [p._slots for p in self.pool.pools],
+            "pool_free": [p._free for p in self.pool.pools],
+            "extra": self._checkpoint_extra(),
+        }
+        with open(path, "wb") as f:
+            pickle.dump(state, f)
+
+    def restore(self, path: str) -> None:
+        with open(path, "rb") as f:
+            state = pickle.load(f)
+        self.clock = state["clock"]
+        self.pending = state["pending"]
+        self.events = state["events"]
+        self.busy_until = state["busy_until"]
+        self.failed = state["failed"]
+        self.metrics = state["metrics"]
+        self._req_index = state["req_index"]
+        for p, slots, free in zip(
+            self.pool.pools, state["pool_slots"], state["pool_free"]
+        ):
+            p._slots, p._free = slots, free
+        self._restore_extra(state["extra"])
+
+    def _checkpoint_extra(self) -> Any:
+        return None
+
+    def _restore_extra(self, extra: Any) -> None:
+        pass
+
+
+# ======================================================================= ESP
+
+
+class LoongServeEngine(BaseServingEngine):
+    """The paper's system: ESP + four-step global manager."""
+
+    def __init__(self, *args, mcfg: Optional[ManagerConfig] = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.manager = GlobalManager(self.cfg, self.sib, self.pool,
+                                     mcfg or ManagerConfig())
+        self.ready_decode: List[DecodeBatch] = []
+        self._real_cache: Dict[int, Any] = {}  # rid -> recurrent state (real)
+        self._pending_kv: Dict[int, Any] = {}  # rid -> new kv awaiting alloc
+        self._running_decode_ends: Dict[int, float] = {}  # gid -> end time
+
+    # ------------------------------------------------------------- schedule
+    def _try_schedule(self) -> None:
+        for _ in range(4):  # drain: admit more work onto leftover instances
+            idle = [
+                i
+                for i in self.idle_instances()
+                if not any(i in g.instances for g in self.ready_decode)
+            ]
+            if not idle and not self.ready_decode:
+                return
+            if not self.pending and not self.ready_decode:
+                return
+            self.pending.sort(key=lambda r: r.arrival)
+            plan = self.manager.schedule(
+                self.pending, self.ready_decode, idle, self.clock
+            )
+            if not plan.prefill and not plan.decode and not plan.migrations:
+                return
+            self._execute_plan(plan)
+
+    def _execute_plan(self, plan) -> None:
+        # migrations (allocation-step KV moves — reactive, counted)
+        mig_delay: Dict[int, float] = {}
+        for m in plan.migrations:
+            try:
+                moved = self.pool.migrate_request(m.rid, m.src, m.dsts)
+            except OutOfSlots:
+                continue
+            self.metrics.reactive_migration_bytes += moved
+            t = self.sib.migration_time(m.n_tokens)
+            mig_delay[m.src] = mig_delay.get(m.src, 0.0) + t
+
+        # prefill batches
+        for b in plan.prefill:
+            for r in b.requests:
+                if r in self.pending:
+                    self.pending.remove(r)
+                r.phase = Phase.PREFILL
+                if r.prefill_start is None:
+                    r.prefill_start = self.clock
+            # drop annexed instances from stalled ready groups
+            for g in self.ready_decode:
+                g.instances = [i for i in g.instances if i not in b.instances]
+            lens = [r.input_len for r in b.requests]
+            dur = self.sib.prefill_time(b.dop, lens, b.instances)
+            dur += max((mig_delay.get(i, 0.0) for i in b.instances), default=0.0)
+            end = self.clock + dur
+            self._occupy(b.instances, end)
+            self.metrics.prefill_iters += 1
+            self._push(end, "prefill_done", b)
+
+        # decode batches (one iteration each; greedy execution emerges from
+        # faster groups re-entering the queue sooner)
+        launched = []
+        soonest_end = min(self._running_decode_ends.values(), default=None)
+        for g in plan.decode:
+            if not g.instances:
+                continue  # stalled (preempted) — retried next round
+            sum_kv = sum(r.seq_len for r in g.requests)
+            dur = self.sib.decode_time(
+                g.dop, len(g.requests), sum_kv, g.instances
+            )
+            # batch-consolidation hold: if another decode group finishes
+            # within a fraction of our iteration, wait and merge with it at
+            # that boundary (shared weight read; zero-copy under multi-master)
+            if (
+                soonest_end is not None
+                and soonest_end - self.clock < 0.3 * dur
+            ):
+                continue
+            end = self.clock + dur
+            self._occupy(g.instances, end)
+            for r in g.requests:
+                r.decode_exec_time += dur
+            # q-broadcast volume (multi-master): q + partial returns
+            self.metrics.q_broadcast_bytes += (
+                2 * len(g.requests) * self.cfg.n_heads * self.cfg.head_dim
+                * 2 * max(g.dop - 1, 0)
+            )
+            self.metrics.decode_iters += 1
+            self._running_decode_ends[id(g)] = end
+            self._push(end, "decode_done", g)
+            launched.append(g)
+        for g in launched:
+            for rg in list(self.ready_decode):
+                if set(r.rid for r in rg.requests) & set(
+                    r.rid for r in g.requests
+                ):
+                    self.ready_decode.remove(rg)
+
+    # --------------------------------------------------------- prefill done
+    def _on_prefill_done(self, batch: PrefillBatch) -> None:
+        # proactive scale-down: KV lands in the already-reserved slots of the
+        # target group during the ring pass — ZERO migration bytes.
+        if self.real:
+            self._real_prefill(batch)
+        for r in batch.requests:
+            r.prefill_end = self.clock
+            r.phase = Phase.DECODE
+            r.generated += 1  # prefill emits the first token
+            if not self.real:
+                r.output_tokens.append(self._sample_token())
+        done = [r for r in batch.requests if r.done]
+        live = [r for r in batch.requests if not r.done]
+        for r in done:
+            self._finish_request(r)
+            if r.norm_output_latency():
+                self.manager.note_finished_decode(r.norm_output_latency())
+        if live:
+            masters = self.manager._assign_masters(live, batch.scale_down_to)
+            self.ready_decode.append(
+                DecodeBatch(live, list(batch.scale_down_to), masters)
+            )
+
+    # ---------------------------------------------------------- decode done
+    def _on_decode_done(self, g: DecodeBatch) -> None:
+        self._running_decode_ends.pop(id(g), None)
+        if self.real:
+            self._real_decode(g)
+        done, live = [], []
+        for r in g.requests:
+            # the processed token's position (its KV is appended now)
+            pos = r.seq_len - 1
+            r.generated += 1
+            if not self.real:
+                r.output_tokens.append(self._sample_token())
+            placed = False
+            order = [g.masters.get(r.rid, g.instances[0])] + [
+                i for i in g.instances if i != g.masters.get(r.rid)
+            ] + [
+                i for i in range(self.n)
+                if i not in g.instances and i not in self.failed
+            ]
+            for inst in order:
+                try:
+                    self.pool.pools[inst].alloc(r.rid, [pos])
+                    if self.real and r.rid in self._pending_kv:
+                        k_new, v_new = self._pending_kv.pop(r.rid)
+                        self.pool.pools[inst].fill(r.rid, [pos], k_new, v_new)
+                    placed = True
+                    break
+                except OutOfSlots:
+                    continue
+            if not placed:
+                # fleet-wide OOM: evict & requeue (counts as recompute)
+                self.pool.free_request(r.rid)
+                r.n_evictions += 1
+                r.phase = Phase.PENDING
+                r.input_len = r.seq_len
+                r.prefill_end = None
+                self.pending.append(r)
+                continue
+            (done if r.done else live).append(r)
+        for r in done:
+            self._finish_request(r)
+            if r.norm_output_latency():
+                self.manager.note_finished_decode(r.norm_output_latency())
+            self._real_cache.pop(r.rid, None)
+        if live:
+            self.ready_decode.append(DecodeBatch(live, g.instances, g.masters))
+
+    # ----------------------------------------------------------- real compute
+    def _real_prefill(self, batch: PrefillBatch) -> None:
+        import jax.numpy as jnp
+
+        for r in batch.requests:
+            toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
+            logits, cache = self.model.prefill(self.params, {"tokens": toks})
+            r.output_tokens.append(self._sample_token(np.asarray(logits[0, -1])))
+            if cache.k is not None:
+                k = np.asarray(cache.k[:, 0], np.float32)  # [L, T, KVH, D]
+                v = np.asarray(cache.v[:, 0], np.float32)
+                assign = batch.placement[r.rid]
+                for inst, positions in assign.items():
+                    if positions:
+                        self.pool.pools[inst].fill(
+                            r.rid, positions, k[:, positions], v[:, positions]
+                        )
+            if cache.ssm is not None:
+                self._real_cache[r.rid] = cache.ssm
+
+    def _real_decode(self, g: DecodeBatch) -> None:
+        import jax.numpy as jnp
+
+        from repro.models.transformer import Cache
+
+        for r in g.requests:
+            positions, k, v = self.pool.gather_request(r.rid)
+            # cache holds tokens 0..seq_len-2; the processed token's KV is
+            # produced by this step and appended at the master afterwards
+            n_cached = r.seq_len - 1
+            if k is not None:
+                assert len(positions) == n_cached, (len(positions), n_cached)
+            cache = Cache(
+                k=jnp.asarray(k[:, None].astype(self.model.dtype)) if k is not None else None,
+                v=jnp.asarray(v[:, None].astype(self.model.dtype)) if v is not None else None,
+                length=jnp.asarray([n_cached], jnp.int32),
+                ssm=self._real_cache.get(r.rid),
+            )
+            last_tok = r.output_tokens[-1]
+            logits, new_cache, kvs = self.model.decode(
+                self.params, jnp.asarray([last_tok], jnp.int32), cache
+            )
+            r.output_tokens.append(self._sample_token(np.asarray(logits[0])))
+            if new_cache.ssm is not None:
+                self._real_cache[r.rid] = new_cache.ssm
+            if kvs is not None:
+                # stash; _on_decode_done fills it once the slot is allocated
+                self._pending_kv[r.rid] = (
+                    np.asarray(kvs[0][:, 0], np.float32),  # [L, 1, KVH, D]
+                    np.asarray(kvs[1][:, 0], np.float32),
+                )
+
+    def _drop_request_state(self, rids) -> None:
+        for rid in rids:
+            self._real_cache.pop(rid, None)
+
+    def _checkpoint_extra(self):
+        return {"ready_decode": self.ready_decode}
+
+    def _restore_extra(self, extra) -> None:
+        if extra:
+            self.ready_decode = extra["ready_decode"]

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: flash-decode partial over one KV shard.
+
+LoongServe §6 implements "a customized version of Flash-Decoding with extra
+parameters to support ESP": a master's query attends to the KV shard held by
+*this* instance, emitting an UNNORMALIZED partial (o, m, l) that the
+multi-master combine (LSE-weighted reduce) merges across instances. The extra
+ESP parameters here are `k_pos_offset` (the shard's global token offset) and
+the per-request valid length.
+
+Tiling: one q vector per (b, h) stays in VMEM; the KV shard streams in BK
+blocks over the sequential last grid dim with f32 accumulators in scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.models.attention import Partial
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, len_ref,
+    o_ref, m_out_ref, l_out_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+    window: Optional[int],
+    softcap: Optional[float],
+    offset: int,
+    block_k: int,
+    n_k_blocks: int,
+):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qb = q_ref[0, 0, :, :].astype(jnp.float32)  # [H_blk, D] (q heads block)
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)  # [BK, D]
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        qb, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [H_blk, BK]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    cache_len = len_ref[0]  # this request's valid length
+    kpos = offset + ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], block_k), 1)
+    mask = kpos < cache_len
+    if window is not None:
+        mask &= kpos > cache_len - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    l_prev = l_ref[:, 0]
+    m_blk = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    m_safe = jnp.maximum(m_new, -1e29)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[:, 0] = jnp.where(m_blk <= NEG_INF / 2, m_prev, m_new)
+    l_ref[:, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _emit():
+        o_ref[0, 0, :, :] = acc_ref[...]
+        mm = m_ref[:, 0]
+        m_out_ref[0, 0, :] = jnp.where(mm <= NEG_INF / 2, -jnp.inf, mm)
+        l_out_ref[0, 0, :] = l_ref[:, 0]
+
+
+def flash_decode_partial(
+    q: jnp.ndarray,  # [B, 1, H, D]
+    k: jnp.ndarray,  # [B, S_shard, KVH, D] local KV shard
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,  # [B] int32 global valid cache length per request
+    *,
+    k_pos_offset: int = 0,  # global position of this shard's first token
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> Partial:
+    """Returns the unnormalized Partial over this KV shard (to be merged with
+    other shards' partials via attention.merge_partial / the ESP combine)."""
+    b, _, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    q_per_kv = h // kvh
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    n_k = s // block_k
+    grid = (b, kvh, n_k)  # one program per (request, kv head group)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        offset=k_pos_offset, block_k=block_k, n_k_blocks=n_k,
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # q heads for this kv group: [1, 1, q_per_kv, D]
+            pl.BlockSpec((1, 1, q_per_kv, d), lambda b_, g, ik: (b_, 0, g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, g, ik: (b_, ik, g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, g, ik: (b_, ik, g, 0)),
+            pl.BlockSpec((1,), lambda b_, g, ik: (b_,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q_per_kv, d), lambda b_, g, ik: (b_, 0, g, 0)),
+            pl.BlockSpec((1, 1, q_per_kv), lambda b_, g, ik: (b_, 0, g)),
+            pl.BlockSpec((1, 1, q_per_kv), lambda b_, g, ik: (b_, 0, g)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1, h), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1, h), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_per_kv, d), jnp.float32),
+            pltpu.VMEM((q_per_kv, 1), jnp.float32),
+            pltpu.VMEM((q_per_kv, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths.astype(jnp.int32))
+    return Partial(o=o, m=m, l=l)

@@ -1,0 +1,65 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+impl:
+  * "xla"        — pure-jnp reference math (the dry-run / SPMD path; XLA fuses
+                   it well enough on CPU and is the portable fallback on TPU);
+  * "pallas"     — the Pallas TPU kernel (compiled for TPU);
+  * "interpret"  — the Pallas kernel body executed in interpret mode (CPU
+                   validation of the TPU kernel).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode_partial as _fd_kernel
+from repro.kernels.striped_attention import striped_flash_attention as _sa_kernel
+from repro.models.attention import Partial
+
+_DEFAULT_IMPL = "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "interpret")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def attention(
+    q, k, v, q_pos, k_pos, *, causal=True, window=None, softcap=None,
+    impl: Optional[str] = None, block_q: int = 128, block_k: int = 128,
+):
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla":
+        return ref.striped_flash_attention_ref(
+            q, k, v, q_pos, k_pos, causal=causal, window=window, softcap=softcap
+        )
+    return _sa_kernel(
+        q, k, v, jnp.asarray(q_pos), jnp.asarray(k_pos), causal=causal,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"),
+    )
+
+
+def decode_partial(
+    q, k, v, lengths, *, k_pos_offset=0, window=None, softcap=None,
+    impl: Optional[str] = None, block_k: int = 128,
+) -> Partial:
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla":
+        return ref.flash_decode_partial_ref(
+            q, k, v, lengths, k_pos_offset=k_pos_offset, window=window,
+            softcap=softcap,
+        )
+    return _fd_kernel(
+        q, k, v, lengths, k_pos_offset=k_pos_offset, window=window,
+        softcap=softcap, block_k=block_k, interpret=(impl == "interpret"),
+    )

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models import attention as A
+
+
+def striped_flash_attention_ref(
+    q, k, v, q_pos, k_pos, *, causal=True, window=None, softcap=None
+):
+    return A.full_attention(
+        q, k, v, q_pos=jnp.asarray(q_pos), k_pos=jnp.asarray(k_pos),
+        causal=causal, window=window, softcap=softcap,
+    )
+
+
+def flash_decode_partial_ref(
+    q, k, v, lengths, *, k_pos_offset=0, window=None, softcap=None
+) -> A.Partial:
+    b, s = k.shape[0], k.shape[1]
+    pos = k_pos_offset + jnp.arange(s)
+    cl = jnp.asarray(lengths)
+    valid = pos[None, :] < cl[:, None]
+    if window is not None:
+        valid &= pos[None, :] > (cl[:, None] - window)
+    mask = jnp.broadcast_to(valid[:, None, :], (b, q.shape[1], s))
+    return A.partial_attention(q, k, v, mask, softcap=softcap)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: striped flash attention (the per-ring-step partial).
+
+This is the compute hot-spot of ESP prefill (LoongServe §6 tunes a Triton
+StripedAttention kernel; the TPU adaptation per DESIGN.md §2 replaces
+SM-occupancy/shared-memory tuning with BlockSpec VMEM tiling):
+
+  * the q block (BQ x D) stays resident in VMEM across the KV stream;
+  * KV is streamed through VMEM in BK x D blocks via the sequential last grid
+    dimension, with f32 online-softmax accumulators in VMEM scratch;
+  * masks are *position-based* (q_pos/k_pos blocks ride along), so the same
+    kernel serves the striped layout, contiguous ring layouts, SWA windows
+    and the non-causal encoder case;
+  * block shapes default to 128 (MXU-aligned); GQA is handled by the KV-head
+    index map (kv_head = q_head // q_per_kv) so KV blocks are fetched once
+    per q-head group, not expanded in HBM.
+
+Validated in interpret mode against kernels/ref.py on CPU; targets TPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, qp_ref, kp_ref,  # inputs
+    o_ref,  # output
+    acc_ref, m_ref, l_ref,  # VMEM scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    n_k_blocks: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qb = q_ref[0, :, 0, :].astype(jnp.float32)  # [BQ, D]
+    kb = k_ref[0, :, 0, :].astype(jnp.float32)  # [BK, D]
+    vb = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        qb, kb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BQ, BK]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qp = qp_ref[:].astype(jnp.int32)  # [BQ]
+    kp = kp_ref[:].astype(jnp.int32)  # [BK]
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if window is not None:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]  # [BQ]
+    l_prev = l_ref[:, 0]
+    m_blk = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    m_safe = jnp.maximum(m_new, -1e29)  # fully-masked-row guard
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, vb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc
+    m_ref[:, 0] = jnp.where(m_blk <= NEG_INF / 2, m_prev, m_new)
+    l_ref[:, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def striped_flash_attention(
+    q: jnp.ndarray,  # [B, Sq, H, D]
+    k: jnp.ndarray,  # [B, Sk, KVH, D]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # [Sq] int32 global positions (striped layout ok)
+    k_pos: jnp.ndarray,  # [Sk]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    q_per_kv = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    n_q, n_k = sq // block_q, sk // block_k
+    grid = (b, h, n_q, n_k)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        n_k_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, d),
+                lambda b_, h_, iq, ik, qpk=q_per_kv: (b_, ik, h_ // qpk, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, d),
+                lambda b_, h_, iq, ik, qpk=q_per_kv: (b_, ik, h_ // qpk, 0),
+            ),
+            pl.BlockSpec((block_q,), lambda b_, h_, iq, ik: (iq,)),
+            pl.BlockSpec((block_k,), lambda b_, h_, iq, ik: (ik,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos.astype(jnp.int32), k_pos.astype(jnp.int32))

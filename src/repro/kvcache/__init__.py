@@ -1,0 +1,3 @@
+"""Unified distributed KV cache pool at single-token granularity."""
+from repro.kvcache.pool import KVPool, OutOfSlots  # noqa: F401
+from repro.kvcache.distributed import DistributedKVPool, PlacementPlan  # noqa: F401

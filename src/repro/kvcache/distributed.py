@@ -1,0 +1,200 @@
+"""Unified distributed KV cache pool (LoongServe §3/§4).
+
+The per-instance pools together form one logical pool; tokens of one request
+may live on any subset of instances at single-token granularity. This module
+owns placement planning (used by proactive scale-down and multi-master
+appends), migration accounting (used by the *baselines* and by the allocation
+step's preemption path — ESP's own transitions are zero-copy), and
+fragmentation metrics (paper Fig. 4's failure mode, which token granularity
+eliminates).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kvcache.pool import KVPool, OutOfSlots
+
+
+@dataclass
+class PlacementPlan:
+    """Token-level placement: instance -> sorted list of global positions."""
+
+    request_id: int
+    assignment: Dict[int, List[int]]
+
+    @property
+    def n_tokens(self) -> int:
+        return sum(len(v) for v in self.assignment.values())
+
+    def instances(self) -> List[int]:
+        return [i for i, toks in self.assignment.items() if toks]
+
+
+class DistributedKVPool:
+    def __init__(self, cfg: ModelConfig, n_instances: int,
+                 capacity_per_instance: int, store_values: bool = True):
+        self.cfg = cfg
+        self.pools: List[KVPool] = [
+            KVPool(cfg, capacity_per_instance, i, store_values)
+            for i in range(n_instances)
+        ]
+        self.migrated_bytes = 0  # reactive-migration traffic (baselines)
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def total_free(self) -> int:
+        return sum(p.free_slots for p in self.pools)
+
+    @property
+    def total_used(self) -> int:
+        return sum(p.used for p in self.pools)
+
+    def free_map(self) -> Dict[int, int]:
+        return {p.instance_id: p.free_slots for p in self.pools}
+
+    def max_contiguous_request(self) -> int:
+        """Largest request a *locality-constrained* system could admit
+        (paper Fig. 4): bounded by the single largest per-instance free space.
+        The unified pool instead admits up to `total_free`."""
+        return max((p.free_slots for p in self.pools), default=0)
+
+    def fragmentation_waste(self) -> int:
+        """Tokens admissible by the unified pool but NOT by a locality-
+        constrained one."""
+        return self.total_free - self.max_contiguous_request()
+
+    def request_instances(self, request_id: int) -> List[int]:
+        return [p.instance_id for p in self.pools if p.tokens_of(request_id)]
+
+    def request_tokens(self, request_id: int) -> int:
+        return sum(len(p.tokens_of(request_id)) for p in self.pools)
+
+    # -------------------------------------------------------------- placement
+    def plan_placement(
+        self,
+        request_id: int,
+        positions: Sequence[int],
+        target_instances: Sequence[int],
+        *,
+        proportional: bool = True,
+    ) -> PlacementPlan:
+        """Split `positions` across `target_instances` at token granularity.
+
+        proportional=True splits by free capacity (LoongServe: "any token-level
+        KV cache allocation plan according to the memory availability of each
+        instance without computational load imbalance", §4.1); otherwise an
+        even round-robin split.
+        """
+        positions = list(positions)
+        n = len(positions)
+        free = {i: self.pools[i].free_slots for i in target_instances}
+        if sum(free.values()) < n:
+            raise OutOfSlots(
+                f"request {request_id}: need {n} tokens, "
+                f"free {sum(free.values())} on {list(target_instances)}"
+            )
+        assignment: Dict[int, List[int]] = {i: [] for i in target_instances}
+        if proportional:
+            total_free = sum(free.values())
+            quota = {
+                i: int(np.floor(n * free[i] / total_free)) for i in target_instances
+            }
+            # distribute the remainder to the freest instances
+            rem = n - sum(quota.values())
+            for i in sorted(target_instances, key=lambda j: -free[j]):
+                if rem == 0:
+                    break
+                if quota[i] < free[i]:
+                    quota[i] += 1
+                    rem -= 1
+            # cap by actual free space, spill remainder
+            spill = 0
+            for i in target_instances:
+                if quota[i] > free[i]:
+                    spill += quota[i] - free[i]
+                    quota[i] = free[i]
+            for i in target_instances:
+                take = min(spill, free[i] - quota[i])
+                quota[i] += take
+                spill -= take
+            cursor = 0
+            for i in target_instances:
+                assignment[i] = positions[cursor : cursor + quota[i]]
+                cursor += quota[i]
+        else:
+            for j, pos in enumerate(positions):
+                assignment[target_instances[j % len(target_instances)]].append(pos)
+        return PlacementPlan(request_id, assignment)
+
+    def place(
+        self,
+        plan: PlacementPlan,
+        k: Optional[np.ndarray] = None,  # [n_attn, n_tokens, KVH, D] by position order
+        v: Optional[np.ndarray] = None,
+        position_index: Optional[Dict[int, int]] = None,
+    ) -> None:
+        """Write tokens per `plan`. With values, `position_index` maps global
+        position -> column of k/v (default: enumerate sorted positions)."""
+        if k is not None and position_index is None:
+            all_pos = sorted(
+                pos for toks in plan.assignment.values() for pos in toks
+            )
+            position_index = {p: i for i, p in enumerate(all_pos)}
+        for inst, toks in plan.assignment.items():
+            if not toks:
+                continue
+            if k is None:
+                self.pools[inst].alloc(plan.request_id, toks)
+            else:
+                cols = [position_index[p] for p in toks]
+                self.pools[inst].write(
+                    plan.request_id, toks, k[:, cols], v[:, cols]
+                )
+
+    # -------------------------------------------------------------- migration
+    def migrate_request(
+        self, request_id: int, src: int, dst_candidates: Sequence[int]
+    ) -> int:
+        """Move a request's tokens off instance `src` (reactive migration /
+        preemption-avoidance path, §5.2). Returns bytes moved and accounts
+        them in `migrated_bytes`."""
+        pool = self.pools[src]
+        toks = pool.tokens_of(request_id)
+        if not toks:
+            return 0
+        positions = sorted(toks)
+        _, k, v = pool.gather(request_id)
+        plan = self.plan_placement(
+            request_id, positions, [d for d in dst_candidates if d != src]
+        )
+        pool.free_request(request_id)
+        if k is not None and pool.store_values:
+            pos_idx = {p: i for i, p in enumerate(positions)}
+            self.place(plan, k, v, pos_idx)
+        else:
+            self.place(plan)
+        moved = len(positions) * pool.bytes_per_slot
+        self.migrated_bytes += moved
+        return moved
+
+    def free_request(self, request_id: int) -> int:
+        return sum(p.free_request(request_id) for p in self.pools)
+
+    # ---------------------------------------------------------------- gather
+    def gather_request(
+        self, request_id: int
+    ) -> Tuple[np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
+        """Dense (positions, k, v) across all instances, position-sorted."""
+        parts = [p.gather(request_id) for p in self.pools]
+        positions = np.concatenate([pp[0] for pp in parts])
+        order = np.argsort(positions)
+        positions = positions[order]
+        if not self.pools[0].store_values:
+            return positions, None, None
+        k = np.concatenate([pp[1] for pp in parts], axis=1)[:, order]
+        v = np.concatenate([pp[2] for pp in parts], axis=1)[:, order]
+        return positions, k, v

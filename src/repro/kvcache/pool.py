@@ -1,0 +1,139 @@
+"""Token-granularity paged KV pool for one elastic instance.
+
+LoongServe manages KV "at the granularity of a single token across instances
+without any locality constraints" (§1, §4). Page size == 1 token: a slot holds
+the KV vectors of one token across all attention applications of the model.
+
+Storage is host-side numpy (the management plane); the engine gathers dense
+per-request views to feed jitted compute. `bytes_per_slot` reflects the real
+bf16 KV footprint so pool capacities model HBM honestly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class OutOfSlots(RuntimeError):
+    pass
+
+
+@dataclass
+class TokenRef:
+    """Where one token's KV lives."""
+
+    instance: int
+    slot: int
+
+
+class KVPool:
+    """Per-instance pool. Slots are single tokens."""
+
+    def __init__(self, cfg: ModelConfig, capacity: int, instance_id: int = 0,
+                 store_values: bool = True):
+        self.cfg = cfg
+        self.capacity = int(capacity)
+        self.instance_id = instance_id
+        self.store_values = store_values
+        n_attn = max(cfg.n_attention_applications, 1)
+        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
+        # request_id -> {global_pos: slot}
+        self._slots: Dict[int, Dict[int, int]] = {}
+        if store_values:
+            shape = (n_attn, self.capacity, cfg.n_kv_heads, cfg.head_dim)
+            self.k = np.zeros(shape, np.float32)
+            self.v = np.zeros(shape, np.float32)
+
+    # ------------------------------------------------------------- accounting
+    @property
+    def used(self) -> int:
+        return self.capacity - len(self._free)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def bytes_per_slot(self) -> int:
+        return max(self.cfg.kv_bytes_per_token, 1)
+
+    def requests(self) -> List[int]:
+        return list(self._slots)
+
+    def tokens_of(self, request_id: int) -> Dict[int, int]:
+        return dict(self._slots.get(request_id, {}))
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self, request_id: int, positions: Sequence[int]) -> List[int]:
+        if len(positions) > len(self._free):
+            raise OutOfSlots(
+                f"instance {self.instance_id}: need {len(positions)}, "
+                f"free {len(self._free)}"
+            )
+        slots = [self._free.pop() for _ in positions]
+        mp = self._slots.setdefault(request_id, {})
+        for pos, slot in zip(positions, slots):
+            assert pos not in mp, (request_id, pos)
+            mp[pos] = slot
+        return slots
+
+    def free_request(self, request_id: int) -> int:
+        mp = self._slots.pop(request_id, {})
+        self._free.extend(mp.values())
+        return len(mp)
+
+    def free_positions(self, request_id: int, positions: Sequence[int]) -> int:
+        """Free specific token positions (SWA window eviction)."""
+        mp = self._slots.get(request_id, {})
+        n = 0
+        for pos in positions:
+            slot = mp.pop(pos, None)
+            if slot is not None:
+                self._free.append(slot)
+                n += 1
+        if not mp:
+            self._slots.pop(request_id, None)
+        return n
+
+    # ------------------------------------------------------------------ data
+    def write(self, request_id: int, positions: Sequence[int],
+              k: np.ndarray, v: np.ndarray) -> None:
+        """k/v: [n_attn, n_tokens, KVH, D] for `positions` (allocates)."""
+        slots = self.alloc(request_id, positions)
+        if self.store_values:
+            idx = np.asarray(slots)
+            self.k[:, idx] = np.asarray(k, np.float32)
+            self.v[:, idx] = np.asarray(v, np.float32)
+
+    def fill(self, request_id: int, positions: Sequence[int],
+             k: np.ndarray, v: np.ndarray) -> None:
+        """Write values into ALREADY-RESERVED slots (proactive scale-down:
+        the scheduler reserves placement, the prefill ring fills it)."""
+        if not self.store_values:
+            return
+        mp = self._slots[request_id]
+        idx = np.array([mp[p] for p in positions], np.int64)
+        if len(idx):
+            self.k[:, idx] = np.asarray(k, np.float32)
+            self.v[:, idx] = np.asarray(v, np.float32)
+
+    def gather(self, request_id: int) -> Tuple[np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
+        """Returns (positions sorted, k, v) for this instance's share."""
+        mp = self._slots.get(request_id, {})
+        positions = np.array(sorted(mp), np.int64)
+        if not self.store_values:
+            return positions, None, None
+        idx = np.array([mp[p] for p in positions], np.int64)
+        if len(idx) == 0:
+            n_attn = self.k.shape[0]
+            empty = np.zeros((n_attn, 0) + self.k.shape[2:], np.float32)
+            return positions, empty, empty.copy()
+        return positions, self.k[:, idx], self.v[:, idx]
+
+    def evict(self, request_id: int) -> int:
+        """Evict a request entirely (recompute later). Returns freed tokens."""
+        return self.free_request(request_id)

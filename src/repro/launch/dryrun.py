@@ -1,0 +1,343 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the step (train/prefill/decode) with ESP + per-arch shardings,
+  2. `.lower(**input_specs(...))` with ShapeDtypeStruct stand-ins,
+  3. `.compile()` on the 16×16 single-pod mesh and the 2×16×16 multi-pod mesh,
+  4. records `memory_analysis()` (fits?), `cost_analysis()` (FLOPs/bytes) and
+     the collective-byte census parsed from the compiled HLO (while-loop
+     bodies are multiplied by their parsed trip counts) — the §Roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape prefill_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+# TPU v5e constants (per chip) — roofline brief
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of collectives in compiled HLO, scaling ops inside
+    while-loop bodies by the loop trip count."""
+    from repro.launch.hlo import collective_census
+
+    return collective_census(hlo_text)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    esp: bool = True,
+    mesh=None,
+    verbose: bool = True,
+    options: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """options (hillclimb variants, EXPERIMENTS.md §Perf):
+      ring_slice_tp: de-duplicated ring legs across tp (A2)
+      kernel_adjusted: census excludes Pallas-kernel-resident attention
+        intermediates (A1 — the paper's own custom-kernel configuration)
+      ssm_chunk: override the recurrent chunk length (B)
+      moe_capacity_factor: override MoE capacity (C)
+    """
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.sharding import param_shardings, param_specs
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import dataclasses
+
+    options = options or {}
+    cfg = get_config(arch)
+    for field in ("ssm_chunk", "moe_capacity_factor"):
+        if field in options:
+            cfg = dataclasses.replace(cfg, **{field: options[field]})
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "why": why}
+
+    # bf16 attention dots for TPU-faithful memory accounting (see
+    # models/attention.py: XLA:CPU would otherwise materialize f32 operand
+    # converts that the MXU performs natively)
+    from repro.models import attention as _attn
+
+    _attn.set_dot_accum_f32(False)
+
+    t0 = time.time()
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    res: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": dict(mesh.shape),
+        "chips": n_chips,
+        "esp": esp,
+        "options": dict(options),
+    }
+    try:
+        specs = steps_lib.input_specs(cfg, shape, mesh)
+        shards = steps_lib.input_shardings(cfg, shape, mesh)
+
+        if shape.kind == "train":
+            # gradient accumulation: 8 microbatches keeps per-layer activation
+            # footprints inside HBM at global_batch=256 (see EXPERIMENTS.md)
+            model, step = steps_lib.make_train_step(cfg, mesh, microbatches=8)
+        elif shape.kind == "prefill":
+            model, step = steps_lib.make_prefill_step(
+                cfg, mesh, esp=esp,
+                esp_opts={"ring_slice_tp": True} if options.get("ring_slice_tp") else None,
+            )
+        else:
+            model, step = steps_lib.make_decode_step(cfg, mesh, esp=esp)
+
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspecs = param_shardings(cfg, mesh, params_shape,
+                                 train=shape.kind == "train")
+
+        with mesh:
+            if shape.kind == "train":
+                opt_shape = steps_lib.opt_state_shapes(params_shape)
+                ospecs = steps_lib.opt_shardings(cfg, mesh, params_shape)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(pspecs, ospecs, shards["batch"]),
+                ).lower(params_shape, opt_shape, specs["batch"])
+            elif shape.kind == "prefill":
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(
+                        shards["batch"], shards["positions"], pspecs,
+                    ),
+                ).lower(specs["batch"], specs["positions"], params_shape)
+            else:
+                # the serving loop owns the cache buffers and re-donates them
+                # every step (real decode loops alias in-place)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(shards["tokens"], shards["cache"], pspecs),
+                    donate_argnums=(1,),
+                ).lower(specs["tokens"], specs["cache"], params_shape)
+
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        res["lower_s"] = round(t_lower, 2)
+        res["compile_s"] = round(t_compile, 2)
+        res["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+            ),
+        }
+        res["hbm_model"] = estimate_hbm(
+            cfg, shape, mesh,
+            getattr(mem, "argument_size_in_bytes", 0) or 0,
+            getattr(mem, "output_size_in_bytes", 0) or 0,
+        )
+        # raw XLA numbers (NOTE: while-loop bodies counted ONCE — kept for
+        # reference; the roofline uses the trip-count-expanded HLO census)
+        res["cost_raw"] = {
+            "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+        }
+
+        hlo = compiled.as_text()
+        from repro.launch.hlo import hlo_census
+
+        census = hlo_census(
+            hlo,
+            exclude_scope=options.get(
+                "exclude_scope",
+                "esp_partial_attention" if options.get("kernel_adjusted") else None,
+            ),
+        )
+        census["total_bytes"] = census["collective_bytes"]
+        res["collectives"] = {
+            k: census[k]
+            for k in (
+                "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "total_bytes",
+            )
+        }
+        flops = census["flops"]  # per-device, trip-count expanded
+        bytes_acc = census["bytes"]
+        res["cost"] = {"flops": flops, "bytes_accessed": bytes_acc}
+
+        # ---- roofline terms (seconds), per device ----
+        comp_t = flops / PEAK_FLOPS
+        mem_t = bytes_acc / HBM_BW
+        coll_bytes = census.get("total_bytes", 0.0)
+        coll_t = coll_bytes / ICI_BW
+        model_flops = model_flops_estimate(cfg, shape)
+        res["roofline"] = {
+            "compute_s": comp_t,
+            "memory_s": mem_t,
+            "collective_s": coll_t,
+            "dominant": max(
+                [("compute", comp_t), ("memory", mem_t), ("collective", coll_t)],
+                key=lambda kv: kv[1],
+            )[0],
+            "model_flops_total": model_flops,
+            "useful_flops_ratio": (
+                model_flops / (flops * n_chips) if flops else None
+            ),
+        }
+        res["status"] = "ok"
+        if verbose:
+            r = res["roofline"]
+            print(
+                f"[{arch} × {shape_name} × {n_chips}] OK "
+                f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+                f"collective={r['collective_s']*1e3:.2f}ms dominant={r['dominant']} "
+                f"peak_mem={res['memory']['peak_bytes']/2**30:.2f}GiB "
+                f"useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'],3)}"
+            )
+            print("  memory_analysis:", res["memory"])
+            print("  cost_analysis: flops=%.3e bytes=%.3e" % (flops, bytes_acc))
+    except Exception as e:  # noqa: BLE001
+        res["status"] = "error"
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} × {shape_name}] FAIL: {res['error']}")
+    return res
+
+
+def estimate_hbm(cfg, shape, mesh, arg_bytes: int, out_bytes: int) -> Dict[str, float]:
+    """TPU-HBM occupancy model (documented in EXPERIMENTS.md §Dry-run).
+
+    XLA:CPU's memory_analysis() inflates `temp` with (a) copies of the
+    parameters/cache into the temp arena (TPU keeps args in place), (b) f32
+    conversion buffers for bf16 math (MXU-native on TPU) and (c) scheduler
+    hoisting under an unbounded-memory model. The TPU estimate is:
+      resident  = per-device argument bytes (params + cache) + outputs
+      transient = the largest per-layer working set actually live at once
+    """
+    import numpy as np
+
+    n_model = mesh.shape.get("model", 1)
+    n_data = mesh.shape.get("data", 1)
+    n_pod = mesh.shape.get("pod", 1)
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    bl = max(b // (n_pod * n_data), 1)  # batch per device (batch-sharded dims)
+    if shape.kind == "prefill":
+        sl = max(s // n_data, 1)
+        act = bl * sl * d * 2  # one [B_l, S_l, d] bf16 buffer
+        score = bl * sl * min(sl, s) * max(cfg.n_heads // n_model, 1) * 4
+        transient = 8 * act + score  # ~8 live activation buffers + scores
+    elif shape.kind == "decode":
+        s_kv = min(s, cfg.sliding_window or s)
+        kv_slice = (s_kv // max(n_data * n_model, 1)) * cfg.n_kv_heads * cfg.head_dim * 4
+        transient = 6 * bl * d * 2 + 3 * b * kv_slice  # few layers' kv slices
+    else:  # train (8 microbatches, remat: per-layer carry + grads f32)
+        mb = 8
+        act = (bl // mb if bl >= mb else 1) * s * d * 2
+        layer_carries = cfg.n_layers * act  # residual stream saved per layer
+        transient = layer_carries + 10 * act
+    return {
+        "resident_bytes": float(arg_bytes + out_bytes),
+        "transient_bytes": float(transient),
+        "tpu_peak_bytes": float(arg_bytes + out_bytes + transient),
+        "fits_16g": bool(arg_bytes + out_bytes + transient < 16 * 2**30),
+    }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (+ attention) for serving."""
+    n_active = cfg.param_count(active_only=True)
+    d_tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    base = (6 if shape.kind == "train" else 2) * n_active * d_tokens
+    # attention term
+    n_attn = cfg.n_attention_applications
+    hd = cfg.n_heads * cfg.head_dim
+    if shape.kind == "decode":
+        kv = shape.seq_len if not cfg.sliding_window else min(
+            shape.seq_len, cfg.sliding_window
+        )
+        attn = 2 * 2 * n_attn * hd * kv * shape.global_batch
+    elif cfg.family == "ssm":
+        attn = 0
+    else:
+        w = cfg.sliding_window or shape.seq_len
+        attn = 2 * 2 * n_attn * hd * shape.global_batch * (
+            shape.seq_len * min(w, shape.seq_len) / 2
+        )
+        attn *= 3 if shape.kind == "train" else 1
+    return float(base + attn)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-esp", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED, SHAPES
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    results = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            results.append(
+                run_cell(arch, shape, multi_pod=mp, esp=not args.no_esp)
+            )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(
+        f"cells: {len(results)}  ok: {sum(1 for r in results if r['status']=='ok')} "
+        f"skipped: {sum(1 for r in results if r['status']=='skipped')}  errors: {n_err}"
+    )
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,277 @@
+"""Compiled-HLO census: FLOPs, bytes and collective traffic with while-loop
+trip-count expansion.
+
+XLA's `compiled.cost_analysis()` reports the while-loop *body* once, so a
+scan-over-layers program under-counts by ~n_layers. This module walks the
+compiled module's call graph (while bodies x their `known_trip_count`,
+fusions, calls) and sums:
+
+  * FLOPs: 2 · |output| · |contracted dims| per dot (matmul-dominated models;
+    elementwise FLOPs are excluded — noted in EXPERIMENTS.md);
+  * bytes: operand + output bytes per non-trivial op (HBM-traffic proxy:
+    fusion boundaries are exactly where XLA materializes buffers);
+  * collectives: per-device ICI traffic per op class with ring-algorithm
+    scaling on the parsed replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops whose operand/output bytes we count toward HBM traffic (buffers are
+# materialized at these boundaries); pure reshapes/bitcasts/GTE excluded.
+_BYTES_OPS = (
+    "fusion", "dot", "convolution", "copy", "transpose", "concatenate",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter", "reduce",
+    "broadcast", "iota", "sort", "pad", "slice", "select-and-scatter",
+    "reduce-window", "cholesky", "triangular-solve", "convert",
+) + _COLLECTIVES
+
+
+def _shape_dims(tok: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.match(tok.strip())
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _shape_bytes_str(tok: str) -> int:
+    dt, dims = _shape_dims(tok)
+    n = 1
+    for d in dims:
+        n *= d
+    return _DTYPE_BYTES.get(dt, 4) * n
+
+
+def _all_shapes(line: str) -> List[str]:
+    return [f"{m.group(1)}[{m.group(2)}]" for m in _SHAPE_RE.finditer(line)]
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[([\d,]+)\]<=\[", line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        return dims[-1] if dims else default
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return default
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = re.match(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$", line)
+        if m:
+            cur = ("ENTRY " if m.group(1) else "") + m.group(2)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+
+
+def _parse_line(line: str):
+    """(name, out_shape_str, opcode) or None."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    return m.group(1), m.group(2), m.group(3)
+
+
+def _dot_flops(line: str, out_shape: str, name_shapes: Dict[str, str]) -> float:
+    _, out_dims = _shape_dims(out_shape)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    mo = re.search(r"dot\(\s*%?([\w\.\-]+)\s*,", line)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if not mo or not mc:
+        return 2.0 * out_n  # degenerate
+    lhs_shape = name_shapes.get(mo.group(1))
+    if lhs_shape is None:
+        return 2.0 * out_n
+    _, lhs_dims = _shape_dims(lhs_shape)
+    k = 1
+    for idx in (int(x) for x in mc.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2.0 * out_n * k
+
+
+def _tuple_bytes(out_shape: str) -> int:
+    # "(f32[2,3], s32[4])" or single shape
+    return sum(_shape_bytes_str(s) for s in _all_shapes(out_shape)) or 0
+
+
+def hlo_census(hlo: str, exclude_scope: Optional[str] = None) -> Dict[str, float]:
+    """exclude_scope: drop the HBM *bytes* of ops whose jax name-scope
+    metadata contains this string (used for kernel-accounting: a Pallas
+    flash kernel keeps those intermediates in VMEM). FLOPs and collectives
+    still count."""
+    comps = _split_computations(hlo)
+
+    # call graph edges: (callee, multiplier, is_fusion). Ops INSIDE a fused
+    # computation never touch HBM: their bytes are excluded (the fusion call
+    # site's operand/output bytes are what's materialized), but their dot
+    # FLOPs still count.
+    edges: Dict[str, List[Tuple[str, float, bool]]] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mt = re.search(r"known_trip_count[^0-9]*(\d+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                trips = float(mt.group(1)) if mt else None
+                if trips is None and mc:
+                    trips = float(_cond_trip(comps.get(mc.group(1), [])))
+                if mb:
+                    edges.setdefault(cname, []).append(
+                        (mb.group(1), trips or 1.0, False)
+                    )
+            else:
+                mf = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+                if mf and ("fusion(" in line or re.search(r"\bcall\(", line)):
+                    edges.setdefault(cname, []).append((mf.group(1), 1.0, True))
+
+    # ops that don't produce fresh data: reading their "output" is reading a
+    # loop-invariant / pass-through buffer
+    _NON_COMPUTE = {"parameter", "get-tuple-element", "constant", "tuple",
+                    "bitcast"}
+
+    def direct(cname: str) -> Dict[str, float]:
+        lines = comps.get(cname, [])
+        name_shapes: Dict[str, str] = {}
+        produced: set = set()  # names defined by actual compute in this comp
+        for line in lines:
+            p = _parse_line(line)
+            if p:
+                name_shapes[p[0]] = p[1]
+                if p[2] not in _NON_COMPUTE:
+                    produced.add(p[0])
+        flops = 0.0
+        bytes_ = 0.0  # per-trip traffic (multiplied by loop trip counts)
+        once = 0.0  # loop-invariant operand reads (counted once: on TPU the
+        # buffer streams from HBM once per loop — cache/VMEM resident after,
+        # and for sliced stacked params trips x slice == the full array)
+        coll = {c: 0.0 for c in _COLLECTIVES}
+        coll_counts = {c: 0 for c in _COLLECTIVES}
+        for line in lines:
+            p = _parse_line(line)
+            if not p:
+                continue
+            name, out_shape, opcode = p
+            if opcode == "dot":
+                flops += _dot_flops(line, out_shape, name_shapes)
+            base = opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                shapes = _all_shapes(line)
+                payload = max((_shape_bytes_str(s) for s in shapes), default=0)
+                g = _group_size(line)
+                if base == "all-reduce":
+                    b = 2 * (g - 1) / max(g, 1) * payload
+                elif base in ("all-gather", "reduce-scatter", "all-to-all"):
+                    b = (g - 1) / max(g, 1) * payload
+                else:
+                    b = payload
+                coll[base] += b
+                coll_counts[base] += 1
+            if opcode in _BYTES_OPS or base in _BYTES_OPS:
+                # kernel accounting: a flash kernel still streams the dot
+                # operands (q/kv/o) through HBM once, but its softmax
+                # intermediates (scores/exp/mask/converts) live in VMEM
+                if (
+                    exclude_scope and opcode != "dot"
+                    and any(sc in line for sc in exclude_scope.split(","))
+                ):
+                    continue
+                bytes_ += _tuple_bytes(out_shape)
+                for mo in re.finditer(r"%([\w\.\-]+)", line.split("=", 1)[1]):
+                    s = name_shapes.get(mo.group(1))
+                    if not s:
+                        continue
+                    if mo.group(1) in produced:
+                        bytes_ += _shape_bytes_str(s)
+                    else:
+                        once += _shape_bytes_str(s)
+        return {"flops": flops, "bytes": bytes_, "once": once, **coll,
+                "_counts": coll_counts}
+
+    memo: Dict[Tuple[str, bool], Dict[str, float]] = {}
+
+    def total(cname: str, in_fusion: bool = False, depth=0) -> Dict[str, float]:
+        key = (cname, in_fusion)
+        if key in memo:
+            return memo[key]
+        if depth > 24:
+            return {"flops": 0.0, "bytes": 0.0, **{c: 0.0 for c in _COLLECTIVES}}
+        acc = direct(cname)
+        if in_fusion:
+            acc["bytes"] = 0.0
+            acc["once"] = 0.0
+        for callee, mult, fuse in edges.get(cname, []):
+            sub = total(callee, in_fusion or fuse, depth + 1)
+            for k in ("flops", "bytes", *_COLLECTIVES):
+                acc[k] = acc.get(k, 0.0) + mult * sub.get(k, 0.0)
+            # loop-invariant reads are NOT multiplied by trip counts
+            acc["once"] = acc.get("once", 0.0) + sub.get("once", 0.0)
+        memo[key] = acc
+        return acc
+
+    entry = next((c for c in comps if c.startswith("ENTRY ")), None)
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c]))
+    res = total(entry) if entry else {}
+    out = {
+        "flops": res.get("flops", 0.0),
+        "bytes": res.get("bytes", 0.0) + res.get("once", 0.0),
+        "bytes_per_trip": res.get("bytes", 0.0),
+        "bytes_invariant": res.get("once", 0.0),
+    }
+    for c in _COLLECTIVES:
+        out[c] = res.get(c, 0.0)
+    out["collective_bytes"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _cond_trip(cond_lines: List[str]) -> int:
+    consts = {}
+    for line in cond_lines:
+        m = re.search(r"%?([\w\.\-]+)\s*=\s*s\d+\[\]\s*constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        if "compare(" in line:
+            for name, val in consts.items():
+                if name in line:
+                    return max(val, 1)
+    return max(consts.values()) if consts else 1
+
+
+# Backwards-compatible wrapper used by dryrun.py
+def collective_census(hlo: str, n_devices_default: int = 1) -> Dict[str, float]:
+    c = hlo_census(hlo)
+    out = {k: c[k] for k in _COLLECTIVES}
+    out["total_bytes"] = c["collective_bytes"]
+    out["flops"] = c["flops"]
+    out["bytes"] = c["bytes"]
+    return out

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips. `data` is the ESP
+sequence-parallel axis between elastic instances; `model` is intra-instance
+tensor parallelism (DESIGN.md §3).
+Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips; `pod` is a
+pure replica/data axis (ESP rings never cross pods; ICI stays intra-pod).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 4, model: int = 2, pod: int = 0):
+    """Small host-device mesh for CPU tests (XLA_FLAGS device count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

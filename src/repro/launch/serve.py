@@ -1,0 +1,101 @@
+"""End-to-end serving driver (the paper's kind of system => serving driver).
+
+Runs the LoongServe engine over a synthetic workload, in `sim` mode (SIB
+clock; paper-scale) or `real` mode (reduced model actually generating tokens
+through the distributed pools).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch lwm-7b --dataset mixed \
+      --rate 0.5 --n 64 --system loongserve
+  PYTHONPATH=src python -m repro.launch.serve --real --n 8 --dataset sharegpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def build_engine(system: str, cfg, n_instances: int, capacity: int, **kw):
+    from repro.baselines import (
+        ChunkedPrefillEngine,
+        FixedGroupsEngine,
+        PDDisaggEngine,
+        StaticTPEngine,
+    )
+    from repro.engine.server import LoongServeEngine
+
+    if system == "loongserve":
+        return LoongServeEngine(cfg, n_instances, capacity, **kw)
+    if system == "vllm-tp":
+        return StaticTPEngine(cfg, n_instances, capacity, **kw)
+    if system == "chunked":
+        return ChunkedPrefillEngine(cfg, n_instances, capacity, **kw)
+    if system == "pd-disagg":
+        return PDDisaggEngine(cfg, n_instances, capacity, **kw)
+    if system == "replicated":
+        groups = [[i] for i in range(n_instances)]
+        return FixedGroupsEngine(cfg, n_instances, capacity, groups=groups, **kw)
+    raise ValueError(system)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lwm-7b")
+    ap.add_argument("--system", default="loongserve",
+                    choices=["loongserve", "vllm-tp", "chunked", "pd-disagg",
+                             "replicated"])
+    ap.add_argument("--dataset", default="mixed",
+                    choices=["sharegpt", "leval", "lveval", "mixed"])
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--instances", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=250_000)
+    ap.add_argument("--real", action="store_true",
+                    help="reduced model, real token generation on CPU")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, reduced
+    from repro.data import poisson_workload, with_prompts
+
+    cfg = get_config(args.arch)
+    kw = {}
+    if args.real:
+        import jax
+
+        from repro.models import build_model
+
+        cfg = reduced(cfg)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        kw = dict(store_values=True, model=model, params=params)
+        capacity = 4096
+        reqs = poisson_workload(args.dataset, args.n, args.rate,
+                                seed=args.seed, max_len=256)
+        for r in reqs:
+            r.max_new_tokens = min(r.max_new_tokens, 16)
+        with_prompts(reqs, cfg.vocab_size, args.seed)
+    else:
+        capacity = args.capacity
+        reqs = poisson_workload(args.dataset, args.n, args.rate, seed=args.seed)
+
+    eng = build_engine(args.system, cfg, args.instances, capacity, **kw)
+    for r in reqs:
+        eng.submit(r)
+    metrics = eng.run()
+    summary = metrics.summary()
+    if args.json:
+        print(json.dumps(summary, indent=1))
+    else:
+        print(f"=== {args.system} on {args.dataset} (rate {args.rate}) ===")
+        for k, v in summary.items():
+            print(f"  {k:28s} {v}")
+        if args.real and metrics.finished:
+            r0 = metrics.finished[0]
+            print(f"  sample output tokens: {r0.output_tokens[:8]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,224 @@
+"""Per-architecture sharding rules (DESIGN.md §3 mesh mapping).
+
+Axes: `data` = ESP sequence parallelism between elastic instances;
+`model` = intra-instance tensor parallelism; `pod` = replica axis.
+
+Head-divisibility decides attention sharding (heads-mode vs batch-mode);
+MoE experts shard over `model` (+ expert-hidden over `data` for arctic's
+128 experts, which cannot replicate across `data`). Recurrent-layer weights
+(mamba/xlstm) replicate — their compute parallelism is batch/sequence.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# §Perf experiment C1 (arctic): shard the MoE grouped-capacity dim over `data`
+# so expert-TP contraction psums shrink by the data-axis width.
+MOE_GROUP_C_OVER_DATA = False
+
+
+def axes_of(mesh: Mesh) -> Dict[str, Optional[str]]:
+    names = mesh.axis_names
+    return {
+        "pod": "pod" if "pod" in names else None,
+        "data": "data" if "data" in names else None,
+        "model": "model" if "model" in names else None,
+    }
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def heads_mode(cfg: ModelConfig, mesh: Mesh) -> bool:
+    tp = tp_size(mesh)
+    return tp == 1 or cfg.n_heads % tp == 0
+
+
+def kv_div(cfg: ModelConfig, mesh: Mesh) -> bool:
+    tp = tp_size(mesh)
+    return tp == 1 or cfg.n_kv_heads % tp == 0
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str]) -> bool:
+    return axis is not None and n % mesh.shape[axis] == 0
+
+
+# ===================================================== parameter shardings
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape, train: bool = False) -> Any:
+    """PartitionSpec tree matching `params_shape` (an eval_shape of init).
+
+    train=True replicates the embedding table: the SPMD partitioner cannot
+    handle the take-grad (scatter-add) against a d-sharded table inside the
+    microbatch loop, and the moments stay ZeRO-sharded over `data` anyway."""
+    hm = heads_mode(cfg, mesh)
+    kd = kv_div(cfg, mesh)
+    tp = tp_size(mesh)
+    arctic_ep = cfg.n_experts > 0 and _div(cfg.n_experts, mesh, "model")
+
+    def rule(path, leaf) -> P:
+        names = [
+            getattr(p, "key", getattr(p, "name", "")) for p in path
+        ]
+        key = names[-1] if names else ""
+        shape = leaf.shape
+        nd = len(shape)
+        lead = nd  # count leading stacked dims to left-pad specs
+        def pad(spec_tail):
+            return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+        # ---- attention ----
+        if key in ("wq",):  # [.., d, H, dh]
+            return pad([None, "model", None]) if hm else P()
+        if key in ("wk", "wv"):
+            return pad([None, "model", None]) if (hm and kd) else P()
+        if key in ("bq",):
+            return pad(["model", None]) if hm else P()
+        if key in ("bk", "bv"):
+            return pad(["model", None]) if (hm and kd) else P()
+        if key == "wo":  # [.., H, dh, d]
+            return pad(["model", None, None]) if hm else P()
+        # ---- ffn ----
+        if key in ("w_gate", "w_up", "w_down") and "moe" in names:
+            f_axis_ok = _div(cfg.d_ff, mesh, "data")
+            if arctic_ep:
+                if key == "w_down":  # [.., E, f, d]
+                    return pad(["model", "data" if f_axis_ok else None, None])
+                return pad(["model", None, "data" if f_axis_ok else None])
+            # few experts: TP inside each expert
+            if key == "w_down":  # [.., E, f, d]
+                return pad([None, "model", None])
+            return pad([None, None, "model"])  # [.., E, d, f]
+        if key in ("w_gate", "w_up"):  # [.., d, f]
+            f = shape[-1]
+            return pad([None, "model"]) if f % tp == 0 else P()
+        if key == "w_down":  # [.., f, d]
+            f = shape[-2]
+            return pad(["model", None]) if f % tp == 0 else P()
+        if key == "router":
+            return P()
+        # ---- embeddings ----
+        if key == "embed":
+            if train:
+                return P()
+            big = int(np.prod(shape)) * 2 > 1_000_000_000
+            return P(None, "model") if (big and shape[1] % tp == 0) else P()
+        if key == "lm_head":
+            return P(None, "model") if shape[1] % tp == 0 else P()
+        if key == "pos_embed":
+            return P()
+        # recurrent cells / norms / everything else: replicated
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape,
+                    train: bool = False) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(cfg, mesh, params_shape, train=train),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ===================================================== activation constrain
+
+
+def make_constrain(cfg: ModelConfig, mesh: Mesh, kind: str) -> Callable:
+    """constrain(x, tag) for the model builders. kind: train|prefill|decode."""
+    ax = axes_of(mesh)
+    pod, data, model = ax["pod"], ax["data"], ax["model"]
+    hm = heads_mode(cfg, mesh)
+    recurrent = cfg.family in ("hybrid", "ssm")
+    arctic_ep = cfg.n_experts > 0 and _div(cfg.n_experts, mesh, "model")
+
+    def batch_axes(b: int, extra_model: bool = False):
+        """Largest divisible prefix of (pod, data[, model]) for a batch dim."""
+        axes = []
+        rem = b
+        for a in ([pod, data, model] if extra_model else [pod, data]):
+            if a and rem % mesh.shape[a] == 0:
+                axes.append(a)
+                rem //= mesh.shape[a]
+        return tuple(axes) if axes else None
+
+    def cspec(x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def constrain(x, tag: str):
+        shp = x.shape
+        if tag == "act":
+            if kind == "train":
+                return cspec(x, P(batch_axes(shp[0]), None, None))
+            if kind == "prefill":
+                # recurrent archs keep batch over model (cells are batch-
+                # parallel); attention archs keep acts seq-sharded only
+                if recurrent:
+                    ba = batch_axes(shp[0], extra_model=True)
+                    # batch gets pod(+model); seq over data
+                    ba = tuple(a for a in (ba or ()) if a != data) or None
+                    return cspec(x, P(ba, data, None))
+                ba = batch_axes(shp[0])
+                ba = tuple(a for a in (ba or ()) if a != data) or None
+                return cspec(x, P(ba, data, None))
+            # decode acts [B, 1, d]: masters = batch over (pod, data)
+            return cspec(x, P(batch_axes(shp[0]), None, None))
+        if tag in ("q", "kv", "attn_out") and kind in ("train",):
+            if hm:
+                hax = model if (tag != "kv" or kv_div(cfg, mesh)) else None
+                return cspec(x, P(batch_axes(shp[0]), None, hax, None))
+            ba = batch_axes(shp[0], extra_model=True)
+            return cspec(x, P(ba, None, None, None))
+        if tag in ("q", "kv", "attn_out") and kind == "prefill":
+            # the ESP shard_map in_specs do the resharding; only pin the seq
+            # axis so XLA doesn't gather the whole sequence
+            if hm:
+                ba = batch_axes(shp[0])
+                ba = tuple(a for a in (ba or ()) if a != data) or None
+                hax = model if (tag != "kv" or kv_div(cfg, mesh)) else None
+                return cspec(x, P(ba, data, hax, None))
+            return x
+        if tag == "moe_group":  # [E, C, d]
+            if arctic_ep:
+                c_ax = data if MOE_GROUP_C_OVER_DATA else None
+                return cspec(x, P(model, c_ax, None))
+            return cspec(x, P(None, batch_axes(shp[1]) or data, None))
+        if tag == "moe_hidden":  # [E, C, f]
+            if arctic_ep:
+                if MOE_GROUP_C_OVER_DATA:
+                    return cspec(x, P(model, data, None))
+                return cspec(x, P(model, None, "data" if _div(cfg.d_ff, mesh, "data") else None))
+            return cspec(x, P(None, batch_axes(shp[1]) or data, model if cfg.d_ff % tp_size(mesh) == 0 else None))
+        if tag == "logits":
+            v = shp[-1]
+            vs = model if v % tp_size(mesh) == 0 else None
+            if kind == "train":
+                return cspec(x, P(batch_axes(shp[0]), None, vs))
+            if x.ndim == 3:
+                if recurrent:
+                    ba = batch_axes(shp[0], extra_model=True)
+                    ba = tuple(a for a in (ba or ()) if a != data) or None
+                    return cspec(x, P(ba, data, vs if not (ba and model in ba) else None))
+                ba = batch_axes(shp[0])
+                ba = tuple(a for a in (ba or ()) if a != data) or None
+                return cspec(x, P(ba, data, vs))
+            return cspec(x, P(batch_axes(shp[0]), vs))
+        if tag == "enc_act":  # whisper encoder [B, 1500, d]
+            return cspec(x, P(batch_axes(shp[0]), None, None))
+        if tag == "enc_out":
+            # encoder output feeds seq-sharded decoder cross-attn: replicate
+            # across `data` (37 MB — cheaper than per-layer resharding)
+            ba = (pod,) if (pod and shp[0] % mesh.shape[pod] == 0) else None
+            return cspec(x, P(ba, None, None))
+        return x
+
+    return constrain

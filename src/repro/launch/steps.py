@@ -1,0 +1,451 @@
+"""Step builders + input specs for every (arch × shape × mesh) cell.
+
+Three step kinds per the assigned shapes:
+  * train_step  — loss (chunked CE over the vocab-sharded unembed) + grads +
+                  sharded AdamW (ZeRO-1 over `data`), remat on the layer scan;
+  * prefill_step — ESP striped-ring prefill; emits last-position logits + the
+                  populated KV cache (the proactive-retention object);
+  * decode_step — ESP multi-master decode; one token per request against the
+                  token-granularity sharded cache; returns new KV for the
+                  masters to append (the pool owns placement).
+
+`input_specs` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) and `input_shardings` the matching NamedShardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.esp import ESPAttnImpl
+from repro.launch import sharding as shlib
+from repro.models import build_model
+from repro.models.transformer import Cache
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def build_model_for(cfg: ModelConfig, mesh: Optional[Mesh], kind: str,
+                    *, esp: bool = True, remat: bool = False,
+                    dop: Optional[int] = None, esp_opts: Optional[dict] = None):
+    """Model wired with ESP attention + sharding constraints for `kind`."""
+    attn_impl = None
+    constrain = None
+    if mesh is not None:
+        constrain = shlib.make_constrain(cfg, mesh, kind)
+        if esp and kind in ("prefill", "decode") and "data" in mesh.axis_names:
+            attn_impl = ESPAttnImpl(
+                mesh, cfg, sp_axis="data",
+                tp_axis="model" if "model" in mesh.axis_names else None,
+                force_batch_mode=(cfg.family in ("hybrid", "ssm")),
+                dop=dop, **(esp_opts or {}),
+            )
+    return build_model(cfg, attn_impl=attn_impl, constrain=constrain, remat=remat)
+
+
+# ================================================================ input specs
+
+
+def _batch_axes(mesh: Mesh, b: int, extra_model: bool = False):
+    axes = []
+    rem = b
+    order = ["pod", "data", "model"] if extra_model else ["pod", "data"]
+    for a in order:
+        if a in mesh.axis_names and rem % mesh.shape[a] == 0:
+            axes.append(a)
+            rem //= mesh.shape[a]
+    return tuple(axes) if axes else None
+
+
+def _pod_axis(mesh: Mesh, b: int):
+    if "pod" in mesh.axis_names and b % mesh.shape["pod"] == 0:
+        return ("pod",)
+    return None
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """KV tokens held at decode: SWA archs keep only the window."""
+    s = shape.seq_len
+    if cfg.sliding_window:
+        s = min(s, cfg.sliding_window)
+    # keep it shardable over data(16) x model(16)
+    return max(s, 256)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, Any]:
+    """kwargs of ShapeDtypeStructs for the step of `shape.kind`."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        if cfg.frontend == "patch_stub":
+            n_img = cfg.n_frontend_tokens
+            batch["tokens"] = _sds((b, s - n_img), jnp.int32)
+            # labels span the full (image+text) sequence; image positions
+            # carry -1 (masked out of the CE loss)
+            batch["labels"] = _sds((b, s), jnp.int32)
+            batch["patch_embeds"] = _sds((b, n_img, cfg.d_model), dt)
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "patch_stub":
+            n_img = cfg.n_frontend_tokens
+            batch["tokens"] = _sds((b, s - n_img), jnp.int32)
+            batch["patch_embeds"] = _sds((b, n_img, cfg.d_model), dt)
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt)
+        return {"batch": batch, "positions": _sds((s,), jnp.int32)}
+    # decode
+    s_kv = decode_cache_len(cfg, shape)
+    n_attn = cfg.n_attention_applications
+    cache: Dict[str, Any] = {"length": _sds((b,), jnp.int32)}
+    if n_attn:
+        kv = _sds((n_attn, b, s_kv, cfg.n_kv_heads, cfg.head_dim), dt)
+        cache["k"] = kv
+        cache["v"] = kv
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_mamba_per_block
+        m_per = cfg.hybrid_mamba_per_block
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_head_dim
+        cache["ssm_h"] = _sds(
+            (n_super, m_per, b, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+        cache["ssm_conv"] = _sds(
+            (n_super, m_per, b, cfg.ssm_conv_width - 1, d_in + 2 * cfg.ssm_state),
+            jnp.float32,
+        )
+    if cfg.family == "ssm":
+        every = cfg.xlstm_slstm_every or (cfg.n_layers + 1)
+        n_super = max(cfg.n_layers // every, 1)
+        m_per = (cfg.n_layers // n_super) - 1
+        d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+        dh = d_in // cfg.n_heads
+        h = cfg.n_heads
+        cache["xl_c"] = _sds((n_super, m_per, b, h, dh, dh), jnp.float32)
+        cache["xl_n"] = _sds((n_super, m_per, b, h, dh), jnp.float32)
+        cache["xl_m"] = _sds((n_super, m_per, b, h), jnp.float32)
+        cache["sl_c"] = _sds((n_super, b, d_in), jnp.float32)
+        cache["sl_n"] = _sds((n_super, b, d_in), jnp.float32)
+        cache["sl_h"] = _sds((n_super, b, d_in), jnp.float32)
+        cache["sl_m"] = _sds((n_super, b, d_in), jnp.float32)
+    if cfg.is_encoder_decoder:
+        cache["cross_k"] = _sds(
+            (cfg.n_layers, b, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim), dt
+        )
+        cache["cross_v"] = cache["cross_k"]
+    return {"tokens": _sds((b,), jnp.int32), "cache": cache}
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, Any]:
+    """NamedSharding tree matching input_specs."""
+    b = shape.global_batch
+    ba = _batch_axes(mesh, b)
+    pod_b = _pod_axis(mesh, b)
+    kd = shlib.kv_div(cfg, mesh)
+    dhm = (not cfg.family in ("hybrid", "ssm")) and shlib.heads_mode(cfg, mesh) and kd
+
+    def ns(spec):
+        return _ns(mesh, spec)
+
+    if shape.kind == "train":
+        out: Dict[str, Any] = {
+            "batch": {
+                "tokens": ns(P(ba, None)),
+                "labels": ns(P(ba, None)),
+            }
+        }
+        if cfg.frontend == "patch_stub":
+            out["batch"]["patch_embeds"] = ns(P(ba, None, None))
+        if cfg.frontend == "audio_stub":
+            out["batch"]["frames"] = ns(P(ba, None, None))
+        return out
+    if shape.kind == "prefill":
+        out = {
+            "batch": {"tokens": ns(P(pod_b, "data"))},
+            "positions": ns(P("data")),
+        }
+        if cfg.frontend == "patch_stub":
+            out["batch"]["patch_embeds"] = ns(P(pod_b, "data", None))
+        if cfg.frontend == "audio_stub":
+            out["batch"]["frames"] = ns(P(pod_b, None, None))
+        return out
+    # decode: multi-master masters over (pod, data); KV seq over data(+model)
+    master_ax = ba
+    cache: Dict[str, Any] = {"length": ns(P(None))}
+    if cfg.n_attention_applications:
+        if dhm:  # heads mode: seq over data, kv heads over model
+            kv_spec = P(None, pod_b, "data", "model", None)
+        else:  # seq over (data, model)
+            kv_spec = P(None, pod_b, ("data", "model"), None, None)
+        cache["k"] = ns(kv_spec)
+        cache["v"] = ns(kv_spec)
+    if cfg.family == "hybrid":
+        cache["ssm_h"] = ns(P(None, None, master_ax))
+        cache["ssm_conv"] = ns(P(None, None, master_ax))
+    if cfg.family == "ssm":
+        for key in ("xl_c", "xl_n", "xl_m"):
+            cache[key] = ns(P(None, None, master_ax))
+        for key in ("sl_c", "sl_n", "sl_h", "sl_m"):
+            cache[key] = ns(P(None, master_ax))
+    if cfg.is_encoder_decoder:
+        cache["cross_k"] = ns(P(None, pod_b, None, None, None))
+        cache["cross_v"] = cache["cross_k"]
+    return {"tokens": ns(P(master_ax)), "cache": cache}
+
+
+# ============================================================== cache adapt
+
+
+def cache_from_flat(cfg: ModelConfig, flat: Dict[str, Any]) -> Cache:
+    """Rebuild the model Cache object from the flat spec dict."""
+    from repro.models import ssm as ssm_mod
+    from repro.models import xlstm as xl_mod
+
+    ssm_state = None
+    if cfg.family == "hybrid":
+        ssm_state = ssm_mod.SSMState(h=flat["ssm_h"], conv=flat["ssm_conv"])
+    if cfg.family == "ssm":
+        mst = xl_mod.MLSTMState(c=flat["xl_c"], n=flat["xl_n"], m=flat["xl_m"])
+        sst = xl_mod.SLSTMState(
+            c=flat["sl_c"], n=flat["sl_n"], h=flat["sl_h"], m=flat["sl_m"]
+        )
+        ssm_state = (mst, sst)
+    return Cache(
+        k=flat.get("k"),
+        v=flat.get("v"),
+        length=flat["length"],
+        ssm=ssm_state,
+        cross_k=flat.get("cross_k"),
+        cross_v=flat.get("cross_v"),
+    )
+
+
+# ================================================================== steps
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, *, esp: bool = True,
+                      dop: Optional[int] = None,
+                      esp_opts: Optional[dict] = None):
+    model = build_model_for(cfg, mesh, "prefill", esp=esp, dop=dop,
+                            esp_opts=esp_opts)
+
+    def prefill_step(batch, positions, params):
+        logits, cache = model.prefill(
+            params, batch, positions, last_logit_only=True
+        )
+        next_token = jnp.argmax(logits[:, -1], axis=-1)
+        return next_token, cache
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, *, esp: bool = True,
+                     dop: Optional[int] = None):
+    model = build_model_for(cfg, mesh, "decode", esp=esp, dop=dop)
+
+    def decode_step(tokens, cache, params):
+        cache_obj = cache_from_flat(cfg, cache)
+        logits, new_cache, kvs = model.decode(params, tokens, cache_obj)
+        next_token = jnp.argmax(logits, axis=-1)
+        out = {"next_token": next_token, "length": new_cache.length}
+        if kvs is not None:
+            out["new_k"], out["new_v"] = kvs
+        if new_cache.ssm is not None and cfg.family == "hybrid":
+            out["ssm_h"] = new_cache.ssm.h
+            out["ssm_conv"] = new_cache.ssm.conv
+        elif new_cache.ssm is not None and cfg.family == "ssm":
+            mst, sst = new_cache.ssm
+            out.update(xl_c=mst.c, xl_n=mst.n, xl_m=mst.m,
+                       sl_c=sst.c, sl_n=sst.n, sl_h=sst.h, sl_m=sst.m)
+        return out
+
+    return model, decode_step
+
+
+# ------------------------------------------------------------------ training
+
+
+def init_opt_state(params):
+    mk = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": mk(), "v": mk(), "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_shapes(params_shape):
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_shape
+    )
+    return {"m": zeros, "v": zeros, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def zero1_specs(param_spec_tree, params_shape, mesh: Mesh):
+    """ZeRO-1: shard optimizer moments over `data` on the first dim that is
+    unsharded and divisible (falls back to the param's own sharding). Each
+    data-rank then owns 1/|data| of the moments; the post-update all-gather
+    of params is the classic ZeRO-1 collective."""
+    dsz = mesh.shape.get("data", 1)
+
+    def one(spec: P, shp):
+        dims = list(spec) + [None] * (len(shp.shape) - len(spec))
+
+        def used(ax):
+            for d in dims:
+                if d == ax or (isinstance(d, tuple) and ax in d):
+                    return True
+            return False
+
+        if "data" in mesh.axis_names and not used("data"):
+            for i, (d, cur) in enumerate(zip(shp.shape, dims)):
+                if cur is None and d % dsz == 0 and d >= dsz:
+                    dims[i] = "data"
+                    break
+        return P(*dims)
+
+    return jax.tree.map(
+        one, param_spec_tree, params_shape,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_shardings(cfg, mesh: Mesh, params_shape):
+    """Full opt-state sharding tree {m, v, step}."""
+    from repro.launch.sharding import param_specs
+    from jax.sharding import NamedSharding
+
+    z = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        zero1_specs(param_specs(cfg, mesh, params_shape, train=True),
+                    params_shape, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"m": z, "v": jax.tree.map(lambda x: x, z),
+            "step": NamedSharding(mesh, P())}
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], *, lr: float = 3e-4,
+                    wd: float = 0.01, loss_chunk: int = 1024,
+                    grad_compression: Optional[str] = None,
+                    remat: bool = True, microbatches: int = 1):
+    model = build_model_for(cfg, mesh, "train", esp=False, remat=remat)
+
+    def loss_fn(params, batch):
+        x, aux = model.hidden(params, batch)
+        labels = batch["labels"]
+        b, s, d = x.shape
+        chunk = min(loss_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        nc = (s + pad) // chunk
+        xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)
+        lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+        def chunk_nll(carry, inp):
+            xx, ll = inp
+            logits = model.unembed(params, xx)  # [B, chunk, V] f32
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            ll_safe = jnp.maximum(ll, 0)
+            tok_logit = jnp.take_along_axis(
+                logits, ll_safe[..., None], axis=-1
+            )[..., 0]
+            nll = jnp.where(ll >= 0, logz - tok_logit, 0.0)
+            cnt = jnp.sum(ll >= 0)
+            return carry, (jnp.sum(nll), cnt)
+
+        _, (nlls, cnts) = jax.lax.scan(chunk_nll, 0.0, (xc, lc))
+        loss = jnp.sum(nlls) / jnp.maximum(jnp.sum(cnts), 1)
+        return loss + 0.01 * aux, (loss, aux)
+
+    def compress(g):
+        if grad_compression != "int8":
+            return g
+
+        def q(x):
+            if x.dtype not in (jnp.float32, jnp.bfloat16):
+                return x
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+            xi = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            return (xi.astype(x.dtype) * scale).astype(x.dtype)
+
+        return jax.tree.map(q, g)
+
+    b1, b2, eps = 0.9, 0.95, 1e-8
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # gradient accumulation: batch-major split keeps each microbatch
+            # contiguous in (and sharded like) the global batch dim
+            def split(a):
+                b = a.shape[0]
+                return a.reshape(microbatches, b // microbatches, *a.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (_, (l, a)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                g_acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0.0), jnp.float32(0.0)), mbatches
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, aux = loss / microbatches, aux / microbatches
+        else:
+            (_, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+        grads = compress(grads)
+        step = opt_state["step"] + 1
+        sf = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**sf
+        bc2 = 1.0 - b2**sf
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            p_new = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+        )
+        return new_params, {"m": new_m, "v": new_v, "step": step}, {
+            "loss": loss, "aux": aux, "grad_norm": gnorm,
+        }
+
+    return model, train_step

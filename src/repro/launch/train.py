@@ -1,0 +1,103 @@
+"""Training driver: runs real train steps on CPU for a reduced config
+(functional check of the train_step used by the dry-run's train_4k cells),
+with checkpoint/restore.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import pickle
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lwm-7b")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compression", default=None, choices=[None, "int8"])
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.launch import steps as steps_lib
+
+    cfg = reduced(get_config(args.arch))
+    model, train_step = steps_lib.make_train_step(
+        cfg, None, lr=args.lr, grad_compression=args.grad_compression,
+        remat=False, loss_chunk=64,
+    )
+    params = model.init(jax.random.PRNGKey(args.seed))
+    opt = steps_lib.init_opt_state(params)
+    start = 0
+    if args.resume:
+        with open(args.resume, "rb") as f:
+            ckpt = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, ckpt["params"])
+        opt = jax.tree.map(jnp.asarray, ckpt["opt"])
+        start = ckpt["step"]
+        print(f"resumed from {args.resume} at step {start}")
+
+    step_jit = jax.jit(train_step)
+    rng = np.random.default_rng(args.seed)
+    b, s = args.batch, args.seq
+
+    def make_batch():
+        toks = rng.integers(0, cfg.vocab_size, (b, s + 1))
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+        if cfg.frontend == "patch_stub":
+            batch["patch_embeds"] = jnp.asarray(
+                rng.normal(size=(b, cfg.n_frontend_tokens, cfg.d_model)) * 0.05,
+                jnp.dtype(cfg.dtype),
+            )
+            batch["labels"] = jnp.asarray(
+                np.concatenate(
+                    [np.full((b, cfg.n_frontend_tokens), -1), toks[:, 1:]], axis=1
+                ),
+                jnp.int32,
+            )
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)) * 0.05,
+                jnp.dtype(cfg.dtype),
+            )
+        return batch
+
+    t0 = time.time()
+    losses = []
+    for i in range(start, start + args.steps):
+        params, opt, m = step_jit(params, opt, make_batch())
+        losses.append(float(m["loss"]))
+        print(f"step {i}: loss={losses[-1]:.4f} gnorm={float(m['grad_norm']):.3f}")
+    dt = time.time() - t0
+    print(f"{args.steps} steps in {dt:.1f}s; loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    if args.checkpoint:
+        with open(args.checkpoint, "wb") as f:
+            pickle.dump(
+                {
+                    "params": jax.tree.map(np.asarray, params),
+                    "opt": jax.tree.map(np.asarray, opt),
+                    "step": start + args.steps,
+                },
+                f,
+            )
+        print(f"checkpointed to {args.checkpoint}")
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

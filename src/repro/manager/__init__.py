@@ -1,0 +1,6 @@
+"""Global manager: four-step scheduler, DP batching, SIB analytical model."""
+from repro.manager.sib import SIB, HardwareSpec, PrefillCoeffs, DecodeCoeffs  # noqa: F401
+from repro.manager.batching import dp_batching, dp_batching_naive, BatchSplit, make_prefill_cost  # noqa: F401
+from repro.manager.scheduler import (  # noqa: F401
+    GlobalManager, ManagerConfig, IterationPlan, PrefillBatch, DecodeBatch, Migration,
+)

@@ -1,0 +1,15 @@
+"""Model zoo: composable pure-JAX architectures driven by ModelConfig."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig, **kwargs):
+    """Factory: returns the right model class for the config family."""
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import EncDecModel
+
+        return EncDecModel(cfg, **kwargs)
+    from repro.models.transformer import Model
+
+    return Model(cfg, **kwargs)

@@ -1,0 +1,202 @@
+"""Attention math: masks, GQA, full/partial (flash-style) attention.
+
+`partial_attention` returns *unnormalized* output + (max, sum-exp) statistics
+so that partial results over disjoint KV shards can be combined exactly —
+this is the primitive both the striped ESP ring (prefill) and multi-master
+distributed decode (LoongServe §4.2 / FlashDecoding-style) are built on.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+# When True (default) attention dots request f32 accumulation — numerically
+# right, and free on TPU (MXU bf16xbf16->f32 is native). XLA:CPU however
+# materializes full f32 CONVERTS of the operands, which inflates the dry-run's
+# memory_analysis with buffers that do not exist on the target hardware; the
+# dry-run flips this off (bf16 dots, f32 softmax stats on the small scores).
+_DOT_ACCUM_F32 = True
+
+
+def set_dot_accum_f32(value: bool) -> None:
+    global _DOT_ACCUM_F32
+    _DOT_ACCUM_F32 = value
+
+
+class Partial(NamedTuple):
+    """Unnormalized attention partial over one KV shard."""
+
+    o: jnp.ndarray  # [B, Sq, H, D] f32, sum_j exp(s_j - m) v_j
+    m: jnp.ndarray  # [B, Sq, H] f32 running max of logits
+    l: jnp.ndarray  # [B, Sq, H] f32 sum of exp(s - m)
+
+
+def gqa_expand(kv: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
+    """[B, S, KVH, D] -> [B, S, KVH*q_per_kv, D] by repetition."""
+    if q_per_kv == 1:
+        return kv
+    b, s, h, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, h, q_per_kv, d)).reshape(
+        b, s, h * q_per_kv, d
+    )
+
+
+def mask_from_positions(
+    q_pos: jnp.ndarray,  # [Sq] or [B, Sq] int32 global positions
+    k_pos: jnp.ndarray,  # [Sk] or [B, Sk]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jnp.ndarray] = None,  # [Sk] or [B, Sk] bool
+) -> jnp.ndarray:
+    """Boolean mask [.., Sq, Sk]; True = attend. Position-based so it is
+    correct under *any* sequence permutation (striped layout)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        m = m & (qp >= kp)
+    if window is not None:
+        m = m & (qp - kp < window)
+    if k_valid is not None:
+        m = m & k_valid[..., None, :]
+    return m
+
+
+def partial_attention(
+    q: jnp.ndarray,  # [B, Sq, H, D]
+    k: jnp.ndarray,  # [B, Sk, KVH, D]
+    v: jnp.ndarray,  # [B, Sk, KVH, D]
+    mask: Optional[jnp.ndarray],  # [Sq, Sk] or [B, Sq, Sk] or None
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+) -> Partial:
+    with jax.named_scope("esp_partial_attention"):
+        return _partial_attention(q, k, v, mask, scale, softcap)
+
+
+def _partial_attention(q, k, v, mask, scale=None, softcap=None) -> Partial:
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    k = gqa_expand(k, h // kvh)
+    v = gqa_expand(v, h // kvh)
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    if _DOT_ACCUM_F32:
+        s = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+        )
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None]
+        elif mask.ndim == 3:
+            mask = mask[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # [B,H,Sq]
+    # guard fully-masked rows: exp(NEG_INF - NEG_INF)=1 would pollute l; use
+    # a masked max floor instead.
+    m_safe = jnp.maximum(m, -1e29)
+    p = jnp.exp(s - m_safe[..., None])
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)  # [B,H,Sq]
+    if _DOT_ACCUM_F32:
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    else:
+        o = jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(v.dtype), v
+        ).astype(jnp.float32)
+    m_out = jnp.where(m <= NEG_INF / 2, -jnp.inf, m_safe)
+    return Partial(
+        o=o,
+        m=jnp.transpose(m_out, (0, 2, 1)),
+        l=jnp.transpose(l, (0, 2, 1)),
+    )
+
+
+def combine_partials(parts: Sequence[Partial]) -> jnp.ndarray:
+    """Exact combination of partials over disjoint KV shards -> [B,Sq,H,D]."""
+    o, m, l = parts[0]
+    for p in parts[1:]:
+        o, m, l = merge_partial((o, m, l), p)
+    return finalize_partial(Partial(o, m, l))
+
+
+def merge_partial(a, b) -> Partial:
+    ao, am, al = a
+    bo, bm, bl = b
+    m = jnp.maximum(am, bm)
+    m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+    wa = jnp.where(jnp.isinf(am), 0.0, jnp.exp(am - m_safe))
+    wb = jnp.where(jnp.isinf(bm), 0.0, jnp.exp(bm - m_safe))
+    return Partial(
+        o=ao * wa[..., None] + bo * wb[..., None],
+        m=m,
+        l=al * wa + bl * wb,
+    )
+
+
+def finalize_partial(p: Partial) -> jnp.ndarray:
+    denom = jnp.where(p.l == 0.0, 1.0, p.l)
+    return p.o / denom[..., None]
+
+
+def full_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    q_pos: Optional[jnp.ndarray] = None,
+    k_pos: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    k_valid: Optional[jnp.ndarray] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Dense reference attention. Returns [B, Sq, H, D] in q.dtype."""
+    sq, sk = q.shape[1], k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    if k_pos is None:
+        k_pos = jnp.arange(sk)
+    need_mask = causal or window is not None or k_valid is not None
+    mask = (
+        mask_from_positions(q_pos, k_pos, causal=causal, window=window, k_valid=k_valid)
+        if need_mask
+        else None
+    )
+    out = finalize_partial(partial_attention(q, k, v, mask, softcap=softcap))
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, 1, H, D] (or [B, Sq_new, H, D])
+    k_cache: jnp.ndarray,  # [B, S, KVH, D]
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # [] or [B] int32 - number of valid cached tokens
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-step decode over a (padded) KV cache; the new token's KV must
+    already be written at position cache_len-1 (or passed inside the cache)."""
+    b, s = k_cache.shape[0], k_cache.shape[1]
+    pos = jnp.arange(s)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 0:
+        cl = jnp.broadcast_to(cl, (b,))
+    k_valid = pos[None, :] < cl[:, None]  # [B, S]
+    q_pos = (cl - 1)[:, None]  # [B, 1]
+    mask = mask_from_positions(
+        q_pos, jnp.broadcast_to(pos, (b, s)), causal=True, window=window, k_valid=k_valid
+    )
+    out = finalize_partial(partial_attention(q, k_cache, v_cache, mask, softcap=softcap))
+    return out.astype(q.dtype)

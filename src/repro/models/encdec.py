@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder model (audio family).
+
+The conv/audio frontend is a STUB per the brief: `batch["frames"]` carries
+precomputed frame embeddings [B, encoder_seq, d_model]. Encoder = bidirectional
+attention stack; decoder = causal self-attn (KV-cached, ESP-managed) +
+cross-attn over the encoder output (static KV, sharded once — no ring needed,
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers
+from repro.models.transformer import Cache, DefaultAttnImpl, _id_constrain
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, attn_impl=None, constrain=None,
+                 remat: bool = False):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+        self.attn_impl = attn_impl or DefaultAttnImpl()
+        self.constrain = constrain or _id_constrain
+        self.remat = remat
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------------ init
+    def _init_attn(self, key, kv_from_d: Optional[int] = None) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        hd = cfg.head_dim
+        ks = layers.split_keys(key, 4)
+        return {
+            "wq": layers.normal_init(ks[0], (cfg.d_model, cfg.n_heads, hd), dt),
+            "wk": layers.normal_init(ks[1], (kv_from_d or cfg.d_model, cfg.n_kv_heads, hd), dt),
+            "wv": layers.normal_init(ks[2], (kv_from_d or cfg.d_model, cfg.n_kv_heads, hd), dt),
+            "wo": layers.normal_init(ks[3], (cfg.n_heads, hd, cfg.d_model), dt),
+        }
+
+    def _init_enc_layer(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = layers.split_keys(key, 4)
+        return {
+            "attn": self._init_attn(ks[0]),
+            "norm1": layers.init_norm(ks[1], cfg.d_model, cfg.norm_kind, dt),
+            "ffn": layers.init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dt),
+            "norm2": layers.init_norm(ks[3], cfg.d_model, cfg.norm_kind, dt),
+        }
+
+    def _init_dec_layer(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = layers.split_keys(key, 6)
+        return {
+            "self_attn": self._init_attn(ks[0]),
+            "cross_attn": self._init_attn(ks[1]),
+            "norm1": layers.init_norm(ks[2], cfg.d_model, cfg.norm_kind, dt),
+            "norm2": layers.init_norm(ks[3], cfg.d_model, cfg.norm_kind, dt),
+            "norm3": layers.init_norm(ks[4], cfg.d_model, cfg.norm_kind, dt),
+            "ffn": layers.init_ffn(ks[5], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dt),
+        }
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg, dt = self.cfg, self.dtype
+        ks = layers.split_keys(key, 6)
+        enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+        dec_keys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": layers.init_embed(ks[2], cfg.vocab_size, cfg.d_model, dt),
+            "pos_embed": layers.normal_init(
+                ks[3], (cfg.max_seq_len, cfg.d_model), dt, scale=0.01
+            ),
+            "enc_layers": jax.vmap(self._init_enc_layer)(enc_keys),
+            "dec_layers": jax.vmap(self._init_dec_layer)(dec_keys),
+            "enc_norm": layers.init_norm(ks[4], cfg.d_model, cfg.norm_kind, dt),
+            "final_norm": layers.init_norm(ks[5], cfg.d_model, cfg.norm_kind, dt),
+            "lm_head": layers.normal_init(ks[2], (cfg.d_model, cfg.vocab_size), dt),
+        }
+
+    # ------------------------------------------------------------- attention
+    def _qkv(self, p, xq, xkv):
+        cfg = self.cfg
+        q = jnp.einsum("btd,dhk->bthk", xq, p["wq"])
+        k = jnp.einsum("btd,dhk->bthk", xkv, p["wk"])
+        v = jnp.einsum("btd,dhk->bthk", xkv, p["wv"])
+        return self.constrain(q, "q"), self.constrain(k, "kv"), self.constrain(v, "kv")
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+        x = x + layers.sinusoidal_positions(x.shape[1], cfg.d_model).astype(self.dtype)
+        x = self.constrain(x, "enc_act")
+
+        def body(x, lp):
+            h = layers.apply_norm(lp["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+            q, k, v = self._qkv(lp["attn"], h, h)
+            # encoder attention is dense/local (fixed 1500-frame sequence,
+            # batch-sharded): no ESP ring needed (DESIGN.md §4)
+            o = attn.full_attention(q, k, v, causal=False)
+            x = x + jnp.einsum("bthk,hkd->btd", o, lp["attn"]["wo"])
+            h = layers.apply_norm(lp["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+            x = x + layers.apply_ffn(lp["ffn"], h, cfg.ffn_kind)
+            return self.constrain(x, "enc_act"), None
+
+        fn = jax.checkpoint(body) if self.remat else body
+        x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+        return layers.apply_norm(params["enc_norm"], x, cfg.norm_kind, cfg.norm_eps)
+
+    # --------------------------------------------------------------- decoder
+    def _decoder_stack(self, params, x, enc_out, positions, *, return_kv,
+                       k_caches=None, v_caches=None, cross_k=None, cross_v=None,
+                       cache_len=None, decode=False):
+        cfg = self.cfg
+
+        def body(x, lp, kc=None, vc=None, ck=None, cv=None):
+            if decode:
+                pass
+            # self attention
+            h = layers.apply_norm(lp["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+            if decode:
+                b = x.shape[0]
+                cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+                q, k_new, v_new = self._qkv(lp["self_attn"], h, h)
+                o = self.attn_impl.decode_attn(
+                    q, kc, vc, k_new, v_new, cl, window=None, softcap=None
+                )
+                kv = (k_new, v_new)
+            else:
+                q, k, v = self._qkv(lp["self_attn"], h, h)
+                o = self.attn_impl.prefill_attn(
+                    q, k, v, positions, positions, causal=True, window=None,
+                    softcap=None,
+                )
+                kv = (k, v) if return_kv else None
+            x = self.constrain(
+                x + jnp.einsum("bthk,hkd->btd", o, lp["self_attn"]["wo"]), "act"
+            )
+            # cross attention (static encoder KV)
+            h = layers.apply_norm(lp["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+            if decode:
+                q = jnp.einsum("btd,dhk->bthk", h, lp["cross_attn"]["wq"])
+                o = attn.full_attention(q, ck, cv, causal=False)
+                cross_kv = None
+            else:
+                q, ck_, cv_ = self._qkv(lp["cross_attn"], h, enc_out)
+                o = attn.full_attention(q, ck_, cv_, causal=False)
+                cross_kv = (ck_, cv_) if return_kv else None
+            x = self.constrain(
+                x + jnp.einsum("bthk,hkd->btd", o, lp["cross_attn"]["wo"]), "act"
+            )
+            h = layers.apply_norm(lp["norm3"], x, cfg.norm_kind, cfg.norm_eps)
+            x = self.constrain(x + layers.apply_ffn(lp["ffn"], h, cfg.ffn_kind), "act")
+            return x, (kv, cross_kv)
+
+        if decode:
+            # static python loop (see transformer._dense_stack decode note)
+            kv_list = []
+            for li in range(k_caches.shape[0]):
+                lp = jax.tree.map(lambda a: a[li], params["dec_layers"])
+                x, (kv, _) = body(x, lp, k_caches[li], v_caches[li],
+                                  cross_k[li], cross_v[li])
+                kv_list.append(kv)
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+            return x, kvs, None
+
+        def scan_body(x, lp):
+            return body(x, lp)
+
+        fn = jax.checkpoint(scan_body) if self.remat else scan_body
+        x, (kvs, cross_kvs) = jax.lax.scan(fn, x, params["dec_layers"])
+        return x, kvs, cross_kvs
+
+    def _embed_tokens(self, params, tokens, positions):
+        x = layers.embed_lookup(params["embed"], tokens).astype(self.dtype)
+        pe = jnp.take(params["pos_embed"], positions, axis=0).astype(self.dtype)
+        if pe.ndim == 2:
+            pe = pe[None]
+        return self.constrain(x + pe, "act")
+
+    # ---------------------------------------------------------------- public
+    def hidden(self, params, batch, positions=None):
+        """Pre-unembed decoder hidden states (chunked-loss training path)."""
+        enc_out = self.constrain(self.encode(params, batch["frames"]), "enc_out")
+        t = batch["tokens"].shape[1]
+        if positions is None:
+            positions = jnp.arange(t)
+        x = self._embed_tokens(params, batch["tokens"], positions)
+        x, _, _ = self._decoder_stack(
+            params, x, enc_out, positions, return_kv=False
+        )
+        x = layers.apply_norm(params["final_norm"], x, self.cfg.norm_kind,
+                              self.cfg.norm_eps)
+        return x, jnp.float32(0.0)
+
+    def unembed(self, params, x):
+        return self.constrain(
+            layers.lm_head_logits(x, params["lm_head"]), "logits"
+        )
+
+    def forward(self, params, batch, positions=None):
+        """Teacher-forced training forward. batch: {frames, tokens}."""
+        x, aux = self.hidden(params, batch, positions)
+        return self.unembed(params, x), aux
+
+    def prefill(self, params, batch, positions=None, *, last_logit_only=False):
+        enc_out = self.constrain(self.encode(params, batch["frames"]), "enc_out")
+        b, t = batch["tokens"].shape
+        if positions is None:
+            positions = jnp.arange(t)
+        x = self._embed_tokens(params, batch["tokens"], positions)
+        x, kvs, cross_kvs = self._decoder_stack(
+            params, x, enc_out, positions, return_kv=True
+        )
+        x = layers.apply_norm(params["final_norm"], x, self.cfg.norm_kind,
+                              self.cfg.norm_eps)
+        if last_logit_only:
+            pos = jnp.broadcast_to(jnp.asarray(positions), (t,))
+            sel = (pos == jnp.max(pos)).astype(x.dtype)
+            x = jnp.einsum("bsd,s->bd", x, sel)[:, None, :]
+        logits = layers.lm_head_logits(x, params["lm_head"])
+        k, v = kvs
+        ck, cv = cross_kvs
+        cache = Cache(
+            k=k, v=v, length=jnp.full((b,), t, jnp.int32), cross_k=ck, cross_v=cv
+        )
+        return logits, cache
+
+    def decode(self, params, tokens, cache: Cache):
+        cfg = self.cfg
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        b = tokens.shape[0]
+        cl = jnp.broadcast_to(jnp.asarray(cache.length), (b,))
+        x = self._embed_tokens(params, tokens, cl[:, None])
+        x, kvs, _ = self._decoder_stack(
+            params, x, None, None, return_kv=False, k_caches=cache.k,
+            v_caches=cache.v, cross_k=cache.cross_k, cross_v=cache.cross_v,
+            cache_len=cache.length, decode=True,
+        )
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = layers.lm_head_logits(x, params["lm_head"])[:, 0]
+        new_cache = Cache(
+            k=cache.k, v=cache.v, length=cache.length + 1,
+            cross_k=cache.cross_k, cross_v=cache.cross_v,
+        )
+        return logits, new_cache, kvs

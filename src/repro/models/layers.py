@@ -1,0 +1,154 @@
+"""Shared primitive layers: norms, RoPE, FFN variants, embeddings, init.
+
+Everything is a pure function over explicit param pytrees (dicts of jnp
+arrays). No framework dependency; `jax.lax.scan` over stacked layer params is
+used by the model builders so HLO size is independent of depth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- init utils
+
+
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------- norms
+
+
+def init_norm(key, d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, kind: str, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm / LayerNorm with f32 statistics, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_cos_sin(positions: jnp.ndarray, d_rot: int, theta: float):
+    """cos/sin tables for rotary embedding.
+
+    positions: int array [...]; returns (cos, sin) of shape [..., d_rot//2],
+    float32.
+    """
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., d_rot/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray, d_rot: int):
+    """Rotate the first `d_rot` features of the last dim of x.
+
+    x: [..., S, H, D]; cos/sin: [..., S, d_rot//2] (broadcast over H).
+    Uses the interleaved-pair ("GPT-NeoX half-split") convention.
+    """
+    if d_rot == 0:
+        return x
+    rot, rest = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = rot[..., : d_rot // 2], rot[..., d_rot // 2 :]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over head dim
+    s = sin[..., None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    return jnp.concatenate([r1, r2, rest], axis=-1)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [n, d] (float32)."""
+    half = d // 2
+    log_timescale = math.log(10000.0) / max(half - 1, 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(half, dtype=jnp.float32))
+    scaled = jnp.arange(n, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------- FFN
+
+
+def init_ffn(key, d: int, f: int, kind: str, dtype) -> dict:
+    ks = split_keys(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": normal_init(ks[0], (d, f), dtype),
+            "w_up": normal_init(ks[1], (d, f), dtype),
+            "w_down": normal_init(ks[2], (f, d), dtype),
+        }
+    return {
+        "w_up": normal_init(ks[0], (d, f), dtype),
+        "w_down": normal_init(ks[1], (f, d), dtype),
+    }
+
+
+def apply_ffn(p: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+    elif kind == "relu2":
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        r = jax.nn.relu(u)
+        h = r * r
+    elif kind == "gelu":
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.gelu(u)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def init_embed(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return normal_init(key, (vocab, d), dtype)
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    # one_hot-free gather; XLA turns this into a dynamic-gather.
+    return jnp.take(table, ids, axis=0)
+
+
+def lm_head_logits(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """[..., d] x [d, vocab] -> f32 logits (softmax stability)."""
+    return jnp.einsum(
+        "...d,dv->...v", x, w, preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Dispatch is gather/scatter (argsort) based, NOT one-hot-einsum based, so the
+compiled FLOP count reflects only *active* expert compute (top_k/E of dense),
+which keeps roofline accounting honest, and the [E, C, d] grouped layout maps
+directly onto expert-parallel sharding (experts over `model`, expert-hidden
+over `data` for arctic; per-expert TP for mixtral). See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class MoEOutput(NamedTuple):
+    out: jnp.ndarray
+    aux_loss: jnp.ndarray  # load-balancing loss (scalar, f32)
+    dropped_frac: jnp.ndarray  # fraction of assignments dropped by capacity
+
+
+def init_moe(key, d: int, f: int, n_experts: int, ffn_kind: str, dtype) -> dict:
+    ks = layers.split_keys(key, 4)
+    p = {
+        "router": layers.normal_init(ks[0], (d, n_experts), dtype, scale=0.02),
+        "w_up": layers.normal_init(ks[1], (n_experts, d, f), dtype),
+        "w_down": layers.normal_init(ks[2], (n_experts, f, d), dtype),
+    }
+    if ffn_kind == "swiglu":
+        p["w_gate"] = layers.normal_init(ks[3], (n_experts, d, f), dtype)
+    return p
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def apply_moe(
+    p: dict,
+    x: jnp.ndarray,  # [T, d] flat tokens
+    *,
+    top_k: int,
+    capacity_factor: float,
+    ffn_kind: str,
+    constrain=None,  # optional fn(tensor, kind) -> tensor for sharding hints
+) -> MoEOutput:
+    t, d = x.shape
+    e = p["router"].shape[1]
+    cap = capacity(t, e, top_k, capacity_factor)
+    cid = constrain or (lambda a, _k: a)
+
+    logits = jnp.einsum(
+        "td,de->te", x, p["router"], preferred_element_type=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E] f32
+    top_p, top_i = jax.lax.top_k(probs, top_k)  # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # ---- sort-based dispatch ----
+    flat_e = top_i.reshape(-1)  # [T*k]
+    flat_w = top_p.reshape(-1)
+    flat_t = jnp.arange(t * top_k) // top_k  # owning token of each slot
+    order = jnp.argsort(flat_e)  # stable
+    se, sw, st = flat_e[order], flat_w[order], flat_t[order]
+    counts = jnp.bincount(flat_e, length=e)  # [E]
+    start = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos = jnp.arange(t * top_k) - start[se]  # position within expert bucket
+    keep = pos < cap
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    # scatter tokens into the [E, C, d] grouped buffer
+    xin = jnp.where(keep[:, None], x[st], 0).astype(x.dtype)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[se, jnp.where(keep, pos, 0)].add(xin, mode="drop")
+    buf = cid(buf, "moe_group")  # [E, C, d] - EP sharding hint
+
+    # ---- expert FFN on grouped tokens ----
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if ffn_kind == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif ffn_kind == "relu2":
+        r = jax.nn.relu(up)
+        h = r * r
+    else:
+        h = jax.nn.gelu(up)
+    h = cid(h, "moe_hidden")
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # [E, C, d]
+    eout = cid(eout, "moe_group")
+
+    # ---- combine back (weighted scatter-add into tokens) ----
+    contrib = eout[se, jnp.where(keep, pos, 0)]  # [T*k, d]
+    contrib = contrib * (sw * keep).astype(contrib.dtype)[:, None]
+    out = jnp.zeros((t, d), contrib.dtype).at[st].add(contrib)
+
+    # Switch-transformer load-balance aux: E * sum(frac_tokens * frac_prob)
+    frac_tokens = counts.astype(jnp.float32) / (t * top_k)
+    frac_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_prob)
+    return MoEOutput(out.astype(x.dtype), aux, dropped)

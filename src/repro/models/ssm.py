@@ -1,0 +1,267 @@
+"""Mamba2 (SSD) layer: chunked-parallel prefill scan + O(1) recurrent decode.
+
+The chunked form precomputes all intra-chunk work in parallel (MXU-friendly
+einsums over [n_chunks, L, ...]) and runs a cheap `lax.scan` only for the
+inter-chunk state recurrence, which is also the handoff point for sequence
+parallelism (core/ring.py passes the chunk-final state across devices with a
+log-step device scan).
+
+State per layer: h [B, H, P, N] (heads, head_dim, state) + conv ring buffer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray  # [B, H, P, N] f32
+    conv: jnp.ndarray  # [B, W-1, conv_dim] last inputs for causal conv
+
+
+def init_mamba2(key, d: int, *, expand: int, head_dim: int, state: int,
+                conv_width: int, dtype) -> dict:
+    d_in = expand * d
+    n_heads = d_in // head_dim
+    conv_dim = d_in + 2 * state
+    ks = layers.split_keys(key, 6)
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "w_in": layers.normal_init(ks[0], (d, 2 * d_in + 2 * state + n_heads), dtype),
+        "conv_w": layers.normal_init(ks[1], (conv_width, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (n_heads,), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(ks[3], (n_heads,), jnp.float32, 1e-3, 0.1))
+            - 1.0
+        ),  # inverse softplus
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "w_out": layers.normal_init(ks[4], (d_in, d), dtype),
+    }
+
+
+def _split_proj(p, zxbcdt, d_in, state, n_heads):
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in : 2 * d_in]
+    b = zxbcdt[..., 2 * d_in : 2 * d_in + state]
+    c = zxbcdt[..., 2 * d_in + state : 2 * d_in + 2 * state]
+    dt = zxbcdt[..., 2 * d_in + 2 * state :]
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                 init: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over time. xbc [B,T,C], w [W,C]. Returns
+    (out [B,T,C], new_tail [B,W-1,C])."""
+    width = w.shape[0]
+    if init is None:
+        init = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([init.astype(xbc.dtype), xbc], axis=1)
+    out = sum(
+        padded[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    out = out + bias[None, None, :]
+    tail = padded[:, padded.shape[1] - (width - 1) :, :]
+    return jax.nn.silu(out), tail
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yn = yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return (yn * jax.nn.silu(z.astype(jnp.float32))).astype(y.dtype)
+
+
+def ssd_chunk_scan(
+    x: jnp.ndarray,  # [B, T, H, P]
+    dt: jnp.ndarray,  # [B, T, H] f32 (post softplus)
+    a: jnp.ndarray,  # [H] f32 negative
+    b: jnp.ndarray,  # [B, T, N]
+    c: jnp.ndarray,  # [B, T, N]
+    chunk: int,
+    h_init: Optional[jnp.ndarray] = None,  # [B, H, P, N] f32
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y [B,T,H,P], h_final [B,H,P,N])."""
+    bsz, t_orig, h, pdim = x.shape
+    n = b.shape[-1]
+    # pad to a chunk multiple; dt=0 at padded steps => state passes through
+    # unchanged and padded positions contribute nothing.
+    pad = (-t_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    t = t_orig + pad
+    nc = t // chunk
+    xf = x.astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+
+    da = dt * a[None, None, :]  # [B,T,H] negative
+    # reshape to chunks
+    xc = xf.reshape(bsz, nc, chunk, h, pdim)
+    bc = bf.reshape(bsz, nc, chunk, n)
+    cc = cf.reshape(bsz, nc, chunk, n)
+    dac = da.reshape(bsz, nc, chunk, h)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(dac, axis=2)  # [B,nc,L,H], decreasing (<=0 increments)
+
+    # ---- intra-chunk (parallel over all chunks) ----
+    g = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # [B,nc,L,L]
+    # decay_ij = exp(cum_i - cum_j) for j<=i
+    dd = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,L,L,H]
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    m = jnp.where(causal, jnp.exp(dd), 0.0) * g[..., None] * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # ---- chunk-local final state + total decay ----
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # [B,nc,L,H]
+    h_loc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, bc, xc)  # [B,nc,H,P,N]
+    decay_tot = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    # ---- inter-chunk recurrence (cheap scan) ----
+    h0 = (
+        h_init.astype(jnp.float32)
+        if h_init is not None
+        else jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    )
+
+    def body(hprev, inputs):
+        hl, dtot, cck, cumk = inputs  # [B,H,P,N],[B,H],[B,L,N],[B,L,H]
+        y_inter = jnp.einsum("bln,bhpn->blhp", cck, hprev) * jnp.exp(cumk)[..., None]
+        hnext = hprev * dtot[:, :, None, None] + hl
+        return hnext, y_inter
+
+    xs = (
+        jnp.moveaxis(h_loc, 1, 0),
+        jnp.moveaxis(decay_tot, 1, 0),
+        jnp.moveaxis(cc, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+    )
+    h_final, y_inter = jax.lax.scan(body, h0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)  # [B,nc,L,H,P]
+    y = (y_intra + y_inter).reshape(bsz, t, h, pdim)[:, :t_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_state_only(
+    x: jnp.ndarray,  # [B, T, H, P]
+    dt: jnp.ndarray,  # [B, T, H] f32
+    a: jnp.ndarray,  # [H] f32 negative
+    b: jnp.ndarray,  # [B, T, N]
+    chunk: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cheap segment-state fold for sequence parallelism: returns
+    (h_seg [B,H,P,N] = final state from zero init, decay_seg [B,H] = total
+    decay across the segment). Skips all output (y) math."""
+    bsz, t_orig, h, pdim = x.shape
+    n = b.shape[-1]
+    pad = (-t_orig) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    t = t_orig + pad
+    nc = t // chunk
+    xf, bf = x.astype(jnp.float32), b.astype(jnp.float32)
+    da = dt * a[None, None, :]
+    xc = xf.reshape(bsz, nc, chunk, h, pdim)
+    bc = bf.reshape(bsz, nc, chunk, n)
+    dac = da.reshape(bsz, nc, chunk, h)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(dac, axis=2)
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtc
+    h_loc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", w, bc, xc)
+    decay_tot = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    def fold(hprev, inputs):
+        hl, dtot = inputs
+        return hprev * dtot[:, :, None, None] + hl, None
+
+    h_seg, _ = jax.lax.scan(
+        fold,
+        jnp.zeros((bsz, h, pdim, n), jnp.float32),
+        (jnp.moveaxis(h_loc, 1, 0), jnp.moveaxis(decay_tot, 1, 0)),
+    )
+    decay_seg = jnp.exp(jnp.sum(da, axis=1))  # [B,H]
+    return h_seg, decay_seg
+
+
+def mamba2_forward(
+    p: dict,
+    xin: jnp.ndarray,  # [B, T, d]
+    cfg,
+    state: Optional[SSMState] = None,
+) -> Tuple[jnp.ndarray, SSMState]:
+    """Full-sequence (prefill/train) mamba2 layer."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("btd,de->bte", xin, p["w_in"])
+    z, x, b, c, dt = _split_proj(p, zxbcdt, d_in, cfg.ssm_state, n_heads)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    conv_init = state.conv if state is not None else None
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_init)
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in : d_in + cfg.ssm_state]
+    c = xbc[..., d_in + cfg.ssm_state :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["A_log"])
+    xh = x.reshape(*x.shape[:2], n_heads, cfg.ssm_head_dim)
+    h_init = state.h if state is not None else None
+    y, h_final = ssd_chunk_scan(xh, dt, a, b, c, cfg.ssm_chunk, h_init)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], d_in).astype(xin.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return out, SSMState(h=h_final, conv=conv_tail)
+
+
+def mamba2_decode_step(
+    p: dict,
+    xin: jnp.ndarray,  # [B, 1, d]
+    cfg,
+    state: SSMState,
+) -> Tuple[jnp.ndarray, SSMState]:
+    """One-token recurrent update: h = exp(dA) h + dt B (x) ; y = C.h + Dx."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("btd,de->bte", xin, p["w_in"])
+    z, x, b, c, dt = _split_proj(p, zxbcdt, d_in, cfg.ssm_state, n_heads)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in : d_in + cfg.ssm_state]
+    c = xbc[..., d_in + cfg.ssm_state :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["A_log"])
+    xh = x.reshape(x.shape[0], n_heads, cfg.ssm_head_dim).astype(jnp.float32)
+    dt1 = dt[:, 0]  # [B,H]
+    decay = jnp.exp(dt1 * a[None, :])  # [B,H]
+    b1 = b[:, 0].astype(jnp.float32)  # [B,N]
+    c1 = c[:, 0].astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh, b1)
+    h = state.h * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", c1, h) + xh * p["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, d_in).astype(xin.dtype)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    return out, SSMState(h=h, conv=conv_tail)
+
+
+def init_ssm_state(cfg, batch: int) -> SSMState:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return SSMState(
+        h=jnp.zeros((batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), jnp.float32),
+    )

@@ -1,0 +1,555 @@
+"""Composable model builder: one `Model` class covering dense / moe / vlm /
+hybrid(zamba2) / ssm(xlstm) families (whisper enc-dec lives in encdec.py and
+reuses the same block helpers).
+
+Key properties:
+  * `jax.lax.scan` over stacked layer params -> HLO size independent of depth.
+  * Attention is pluggable (`attn_impl`): the default is dense local math; the
+    ESP implementations (striped ring prefill, multi-master decode) from
+    repro.core plug in here — the paper's technique is a first-class feature,
+    not a fork of the model.
+  * `positions` is an explicit input everywhere so the ESP *striped
+    permutation* of the sequence is transparent to the model (RoPE and causal
+    masks are position-based, DESIGN.md §2).
+  * `constrain(tensor, tag)` hook threads pjit sharding hints without the
+    model knowing about meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm, xlstm
+
+
+def _id_constrain(x, _tag):
+    return x
+
+
+class DefaultAttnImpl:
+    """Plain (single-group) attention implementation."""
+
+    def prefill_attn(self, q, k, v, q_pos, k_pos, *, causal, window, softcap):
+        return attn.full_attention(
+            q, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window,
+            softcap=softcap,
+        )
+
+    def decode_attn(self, q, k_cache, v_cache, k_new, v_new, cache_len, *,
+                    window, softcap):
+        """q [B,1,H,D]; cache [B,S,KVH,D]; new token's kv [B,1,KVH,D] kept
+        out of the cache (it lives at the master instance under ESP)."""
+        b, s = k_cache.shape[0], k_cache.shape[1]
+        pos = jnp.arange(s)
+        cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+        k_valid = pos[None, :] < cl[:, None]
+        q_pos = cl[:, None]
+        mask = attn.mask_from_positions(
+            q_pos, jnp.broadcast_to(pos, (b, s)), causal=True, window=window,
+            k_valid=k_valid,
+        )
+        p_hist = attn.partial_attention(q, k_cache, v_cache, mask, softcap=softcap)
+        p_new = attn.partial_attention(q, k_new, v_new, None, softcap=softcap)
+        out = attn.finalize_partial(attn.merge_partial(p_hist, p_new))
+        return out.astype(q.dtype)
+
+    def ssm_scan(self, kind, p, x, cfg, state):
+        """Recurrent-layer hook so ESP can add cross-device state handoff.
+
+        kind: "mamba" | "mlstm" | "slstm"; returns (y, new_state)."""
+        if kind == "mamba":
+            return ssm.mamba2_forward(p, x, cfg, state)
+        if kind == "mlstm":
+            return xlstm.mlstm_block_forward(p, x, cfg, state)
+        if kind == "slstm":
+            return xlstm.slstm_block_forward(p, x, cfg, state)
+        raise ValueError(kind)  # pragma: no cover
+
+
+class Cache(NamedTuple):
+    """KV / recurrent state for decode. Fields unused by a family are None."""
+
+    k: Optional[jnp.ndarray] = None  # [L,B,S,KVH,Dh]
+    v: Optional[jnp.ndarray] = None
+    length: Optional[jnp.ndarray] = None  # [] or [B] valid token count
+    ssm: Optional[Any] = None  # stacked SSMState / (MLSTM, SLSTM) states
+    cross_k: Optional[jnp.ndarray] = None  # whisper cross-attn
+    cross_v: Optional[jnp.ndarray] = None
+
+
+# ===================================================================== Model
+
+
+class Model:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        attn_impl=None,
+        constrain: Optional[Callable] = None,
+        remat: bool = False,
+    ):
+        self.cfg = cfg
+        self.attn_impl = attn_impl or DefaultAttnImpl()
+        self.constrain = constrain or _id_constrain
+        self.remat = remat
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ----------------------------------------------------------- parameters
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = self.dtype
+        keys = layers.split_keys(key, 8)
+        params: Dict[str, Any] = {
+            "embed": layers.init_embed(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": layers.init_norm(keys[1], cfg.d_model, cfg.norm_kind, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.normal_init(
+                keys[2], (cfg.d_model, cfg.vocab_size), dt
+            )
+        if cfg.family in ("dense", "vlm", "moe"):
+            n = cfg.n_layers
+            params["layers"] = self._init_stacked(keys[3], n, self._init_dense_layer)
+        elif cfg.family == "hybrid":
+            n_super = cfg.n_layers // cfg.hybrid_mamba_per_block
+            params["layers"] = self._init_stacked(
+                keys[3], n_super, self._init_hybrid_superblock
+            )
+            params["shared_attn"] = self._init_attn(keys[4])
+            params["shared_ffn"] = layers.init_ffn(
+                keys[5], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dt
+            )
+            params["shared_norms"] = {
+                "n1": layers.init_norm(keys[6], cfg.d_model, cfg.norm_kind, dt),
+                "n2": layers.init_norm(keys[7], cfg.d_model, cfg.norm_kind, dt),
+            }
+        elif cfg.family == "ssm":  # xlstm
+            every = cfg.xlstm_slstm_every or (cfg.n_layers + 1)
+            n_super = max(cfg.n_layers // every, 1)
+            m_per = (cfg.n_layers // n_super) - 1  # mLSTM blocks per superblock
+            self._xl_m_per = m_per
+            params["layers"] = self._init_stacked(
+                keys[3], n_super, functools.partial(self._init_xlstm_super, m_per)
+            )
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+        return params
+
+    def _init_stacked(self, key, n, init_one):
+        ks = jax.random.split(key, n)
+        return jax.vmap(init_one)(ks)
+
+    def _init_attn(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        hd = cfg.head_dim
+        ks = layers.split_keys(key, 4)
+        p = {
+            "wq": layers.normal_init(ks[0], (cfg.d_model, cfg.n_heads, hd), dt),
+            "wk": layers.normal_init(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), dt),
+            "wv": layers.normal_init(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), dt),
+            "wo": layers.normal_init(ks[3], (cfg.n_heads, hd, cfg.d_model), dt),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((cfg.n_heads, hd), dt)
+            p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+            p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+        return p
+
+    def _init_dense_layer(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = layers.split_keys(key, 5)
+        p = {
+            "attn": self._init_attn(ks[0]),
+            "norm1": layers.init_norm(ks[1], cfg.d_model, cfg.norm_kind, dt),
+            "norm2": layers.init_norm(ks[2], cfg.d_model, cfg.norm_kind, dt),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe.init_moe(
+                ks[3], cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.ffn_kind, dt
+            )
+            if cfg.dense_ff:
+                p["dense_ffn"] = layers.init_ffn(
+                    ks[4], cfg.d_model, cfg.dense_ff, cfg.ffn_kind, dt
+                )
+        else:
+            p["ffn"] = layers.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dt)
+        return p
+
+    def _init_hybrid_superblock(self, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, cfg.hybrid_mamba_per_block)
+
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "mamba": ssm.init_mamba2(
+                    k1, cfg.d_model, expand=cfg.ssm_expand,
+                    head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                    conv_width=cfg.ssm_conv_width, dtype=dt,
+                ),
+                "norm": layers.init_norm(k2, cfg.d_model, cfg.norm_kind, dt),
+            }
+
+        return {"mamba_layers": jax.vmap(one)(ks)}
+
+    def _init_xlstm_super(self, m_per, key) -> dict:
+        cfg, dt = self.cfg, self.dtype
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        mk = jax.random.split(k1, m_per)
+
+        def one_m(k):
+            ka, kb = jax.random.split(k)
+            return {
+                "cell": xlstm.init_mlstm(ka, cfg, dt),
+                "norm": layers.init_norm(kb, cfg.d_model, cfg.norm_kind, dt),
+            }
+
+        return {
+            "mlstm_layers": jax.vmap(one_m)(mk),
+            "slstm": {
+                "cell": xlstm.init_slstm(k2, cfg, dt),
+                "norm": layers.init_norm(k3, cfg.d_model, cfg.norm_kind, dt),
+            },
+        }
+
+    # ------------------------------------------------------------ embedding
+    def embed_inputs(self, params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """batch: {"tokens": [B,T]} (+ "patch_embeds": [B,Ti,d] for vlm)."""
+        cfg = self.cfg
+        x = layers.embed_lookup(params["embed"], batch["tokens"]).astype(self.dtype)
+        if cfg.frontend == "patch_stub" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(self.dtype)
+            x = jnp.concatenate([pe, x], axis=1)  # image tokens first
+        return self.constrain(x, "act")
+
+    def unembed(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return self.constrain(layers.lm_head_logits(x, w), "logits")
+
+    # -------------------------------------------------------------- qkv math
+    def _qkv(self, p, x, positions):
+        cfg = self.cfg
+        q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+        k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+        v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        if cfg.rope_theta:
+            d_rot = int(cfg.head_dim * cfg.rope_fraction) // 2 * 2
+            cos, sin = layers.rope_cos_sin(positions, d_rot, cfg.rope_theta)
+            q = layers.apply_rope(q, cos, sin, d_rot)
+            k = layers.apply_rope(k, cos, sin, d_rot)
+        return self.constrain(q, "q"), self.constrain(k, "kv"), self.constrain(v, "kv")
+
+    def _attn_block_prefill(self, p, x, positions, return_kv: bool):
+        cfg = self.cfg
+        q, k, v = self._qkv(p, x, positions)
+        out = self.attn_impl.prefill_attn(
+            q, k, v, positions, positions, causal=True,
+            window=cfg.sliding_window, softcap=cfg.attn_logit_softcap,
+        )
+        out = self.constrain(out, "attn_out")
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+        return (y, (k, v)) if return_kv else (y, None)
+
+    def _attn_block_decode(self, p, x, k_cache, v_cache, cache_len):
+        cfg = self.cfg
+        b = x.shape[0]
+        cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+        q, k_new, v_new = self._qkv(p, x, cl[:, None])
+        out = self.attn_impl.decode_attn(
+            q, k_cache, v_cache, k_new, v_new, cl,
+            window=cfg.sliding_window, softcap=cfg.attn_logit_softcap,
+        )
+        y = jnp.einsum("bthk,hkd->btd", out, p["wo"])
+        return y, (k_new, v_new)
+
+    def _ffn_or_moe(self, p, x):
+        cfg = self.cfg
+        if cfg.family == "moe":
+            b, s = x.shape[0], x.shape[1]
+            # S-major flatten: the (sharded) sequence dim stays the leading
+            # factor of the merged token dim, so SPMD propagates the sharding
+            # through the reshape instead of all-gathering tokens
+            flat = jnp.swapaxes(x, 0, 1).reshape(b * s, cfg.d_model)
+            mo = moe.apply_moe(
+                p["moe"], flat, top_k=cfg.moe_top_k,
+                capacity_factor=cfg.moe_capacity_factor, ffn_kind=cfg.ffn_kind,
+                constrain=self.constrain,
+            )
+            y = jnp.swapaxes(mo.out.reshape(s, b, cfg.d_model), 0, 1)
+            if cfg.dense_ff:
+                y = y + layers.apply_ffn(p["dense_ffn"], x, cfg.ffn_kind)
+            return y, mo.aux_loss
+        h = layers.apply_ffn(p["ffn"], x, cfg.ffn_kind)
+        return h, jnp.float32(0.0)
+
+    # ====================================================== dense-like stack
+    def _dense_stack(self, params, x, positions, *, return_kv, k_caches=None,
+                     v_caches=None, cache_len=None, decode=False):
+        cfg = self.cfg
+        naux = jnp.float32(0.0)
+
+        def body(carry, lp, kc=None, vc=None):
+            x, aux = carry
+            h = layers.apply_norm(lp["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+            if decode:
+                y, kv = self._attn_block_decode(lp["attn"], h, kc, vc, cache_len)
+            else:
+                y, kv = self._attn_block_prefill(lp["attn"], h, positions, return_kv)
+            x = self.constrain(x + y, "act")
+            h = layers.apply_norm(lp["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+            y, aux_l = self._ffn_or_moe(lp, h)
+            x = self.constrain(x + y, "act")
+            return (x, aux + aux_l), kv
+
+        if decode:
+            # static python loop: per-layer cache slices keep per-layer
+            # buffers per-layer-sized (a while-loop lets XLA hoist whole-cache
+            # copies/conversions out of the loop — HBM blowup), and the tiny
+            # decode body keeps the unrolled HLO small.
+            n_layers = k_caches.shape[0]
+            carry = (x, naux)
+            kv_list = []
+            for li in range(n_layers):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                carry, kv = body(carry, lp, k_caches[li], v_caches[li])
+                kv_list.append(kv)
+            x, aux = carry
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+            return x, aux, kvs
+
+        fn = jax.checkpoint(body) if self.remat else body
+        (x, aux), kvs = jax.lax.scan(fn, (x, naux), params["layers"])
+        return x, aux, kvs
+
+    # ========================================================= hybrid stack
+    def _hybrid_stack(self, params, x, positions, *, return_kv, ssm_states=None,
+                      k_caches=None, v_caches=None, cache_len=None, decode=False):
+        cfg = self.cfg
+        shared_attn = params["shared_attn"]
+        shared_ffn = params["shared_ffn"]
+        sn = params["shared_norms"]
+
+        def mamba_one(carry, xs):
+            x = carry
+            if decode:
+                mp, st = xs
+                h = layers.apply_norm(mp["norm"], x, cfg.norm_kind, cfg.norm_eps)
+                y, st_new = ssm.mamba2_decode_step(mp["mamba"], h, cfg, st)
+            else:
+                mp, st = xs, None
+                h = layers.apply_norm(mp["norm"], x, cfg.norm_kind, cfg.norm_eps)
+                y, st_new = self.attn_impl.ssm_scan("mamba", mp["mamba"], h, cfg, st)
+            return x + y, st_new
+
+        def super_body(x, sp, sst=None, kc=None, vc=None):
+            if decode:
+                x, new_sst = jax.lax.scan(
+                    mamba_one, x, (sp["mamba_layers"], sst)
+                )
+            else:
+                x, new_sst = jax.lax.scan(mamba_one, x, sp["mamba_layers"])
+            # shared attention + ffn application
+            h = layers.apply_norm(sn["n1"], x, cfg.norm_kind, cfg.norm_eps)
+            if decode:
+                y, kv = self._attn_block_decode(shared_attn, h, kc, vc, cache_len)
+            else:
+                y, kv = self._attn_block_prefill(shared_attn, h, positions, return_kv)
+            x = self.constrain(x + y, "act")
+            h = layers.apply_norm(sn["n2"], x, cfg.norm_kind, cfg.norm_eps)
+            x = self.constrain(x + layers.apply_ffn(shared_ffn, h, cfg.ffn_kind), "act")
+            return x, kv, new_sst
+
+        if decode:
+            n_super = k_caches.shape[0]
+            kv_list, st_list = [], []
+            for si in range(n_super):
+                sp = jax.tree.map(lambda a: a[si], params["layers"])
+                sst = jax.tree.map(lambda a: a[si], ssm_states)
+                x, kv, new_sst = super_body(x, sp, sst, k_caches[si], v_caches[si])
+                kv_list.append(kv)
+                st_list.append(new_sst)
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+            new_states = jax.tree.map(lambda *xs: jnp.stack(xs), *st_list)
+            return x, jnp.float32(0.0), kvs, new_states
+
+        def scan_body(x, sp):
+            x, kv, new_sst = super_body(x, sp)
+            return x, (kv, new_sst)
+
+        fn = jax.checkpoint(scan_body) if self.remat else scan_body
+        x, (kvs, new_states) = jax.lax.scan(fn, x, params["layers"])
+        return x, jnp.float32(0.0), kvs, new_states
+
+    # ========================================================== xlstm stack
+    def _xlstm_stack(self, params, x, *, states=None, decode=False):
+        cfg = self.cfg
+
+        def m_one(carry, xs):
+            x = carry
+            mp, st = xs if decode else (xs, None)
+            h = layers.apply_norm(mp["norm"], x, cfg.norm_kind, cfg.norm_eps)
+            if decode:
+                y, st_new = xlstm.mlstm_block_step(mp["cell"], h, cfg, st)
+            else:
+                y, st_new = self.attn_impl.ssm_scan("mlstm", mp["cell"], h, cfg, st)
+            return x + y, st_new
+
+        def super_body(carry, xs):
+            x = carry
+            if decode:
+                sp, (mst, sst) = xs
+                x, new_mst = jax.lax.scan(m_one, x, (sp["mlstm_layers"], mst))
+            else:
+                sp = xs
+                sst = None
+                x, new_mst = jax.lax.scan(m_one, x, sp["mlstm_layers"])
+            h = layers.apply_norm(
+                sp["slstm"]["norm"], x, cfg.norm_kind, cfg.norm_eps
+            )
+            if decode:
+                y, new_sst = xlstm.slstm_block_step(sp["slstm"]["cell"], h, cfg, sst)
+            else:
+                y, new_sst = self.attn_impl.ssm_scan(
+                    "slstm", sp["slstm"]["cell"], h, cfg, None
+                )
+            x = self.constrain(x + y, "act")
+            return x, (new_mst, new_sst)
+
+        xs = (params["layers"], states) if decode else params["layers"]
+        fn = jax.checkpoint(super_body) if (self.remat and not decode) else super_body
+        x, new_states = jax.lax.scan(fn, x, xs)
+        return x, new_states
+
+    # ============================================================== public
+    def hidden(self, params, batch, positions=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Pre-unembed hidden states (training losses chunk the unembed to
+        avoid materializing [B,S,V]). Returns (x [B,T,d], aux_loss)."""
+        x = self.embed_inputs(params, batch)
+        t = x.shape[1]
+        if positions is None:
+            positions = jnp.arange(t)
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, aux, _ = self._dense_stack(params, x, positions, return_kv=False)
+        elif cfg.family == "hybrid":
+            x, aux, _, _ = self._hybrid_stack(params, x, positions, return_kv=False)
+        elif cfg.family == "ssm":
+            x, _ = self._xlstm_stack(params, x)
+            aux = jnp.float32(0.0)
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+        return x, aux
+
+    def forward(self, params, batch, positions=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full forward (training). Returns (logits [B,T,V], aux_loss)."""
+        x, aux = self.hidden(params, batch, positions)
+        return self.unembed(params, x), aux
+
+    def prefill(self, params, batch, positions=None, *,
+                last_logit_only: bool = False) -> Tuple[jnp.ndarray, Cache]:
+        """Prefill: logits (+ populated cache). With last_logit_only=True the
+        hidden state is sliced to the final *global* position (argmax of the
+        positions array — correct under striped layouts) before the unembed,
+        so the [B,S,V] logits tensor is never materialized (serving path)."""
+        x = self.embed_inputs(params, batch)
+        b, t = x.shape[0], x.shape[1]
+        if positions is None:
+            positions = jnp.arange(t)
+        cfg = self.cfg
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, _, kvs = self._dense_stack(params, x, positions, return_kv=True)
+            k, v = kvs
+            cache = Cache(k=k, v=v, length=jnp.full((b,), t, jnp.int32))
+        elif cfg.family == "hybrid":
+            x, _, kvs, states = self._hybrid_stack(
+                params, x, positions, return_kv=True
+            )
+            k, v = kvs
+            cache = Cache(
+                k=k, v=v, length=jnp.full((b,), t, jnp.int32), ssm=states
+            )
+        elif cfg.family == "ssm":
+            x, states = self._xlstm_stack(params, x)
+            cache = Cache(length=jnp.full((b,), t, jnp.int32), ssm=states)
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+        if last_logit_only:
+            # masked reduction instead of dynamic-slice: stays sharded over
+            # the sequence axis (a slice at a traced index would all-gather x)
+            pos = jnp.broadcast_to(jnp.asarray(positions), (t,))
+            sel = (pos == jnp.max(pos)).astype(x.dtype)
+            x = jnp.einsum("bsd,s->bd", x, sel)[:, None, :]
+        return self.unembed(params, x), cache
+
+    def decode(self, params, tokens, cache: Cache) -> Tuple[jnp.ndarray, Cache]:
+        """One decode step. tokens [B] or [B,1]. Returns (logits [B,V],
+        updated cache metadata + per-layer new KV stacked like the cache);
+        cache.k/v are NOT updated in place here (the engine / KV pool owns
+        placement — LoongServe semantics), instead the new kv is returned via
+        the `ssm`-style aux field of the returned Cache (see `new_kv`)."""
+        cfg = self.cfg
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        x = layers.embed_lookup(params["embed"], tokens).astype(self.dtype)
+        x = self.constrain(x, "act")
+        cl = cache.length
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, _, kvs = self._dense_stack(
+                params, x, None, return_kv=False, k_caches=cache.k,
+                v_caches=cache.v, cache_len=cl, decode=True,
+            )
+            new_cache = Cache(k=cache.k, v=cache.v, length=cl + 1)
+        elif cfg.family == "hybrid":
+            x, _, kvs, new_states = self._hybrid_stack(
+                params, x, None, return_kv=False, ssm_states=cache.ssm,
+                k_caches=cache.k, v_caches=cache.v, cache_len=cl, decode=True,
+            )
+            new_cache = Cache(k=cache.k, v=cache.v, length=cl + 1, ssm=new_states)
+        elif cfg.family == "ssm":
+            x, new_states = self._xlstm_stack(params, x, states=cache.ssm, decode=True)
+            kvs = None
+            new_cache = Cache(length=cl + 1, ssm=new_states)
+        else:  # pragma: no cover
+            raise ValueError(cfg.family)
+        logits = self.unembed(params, x)[:, 0]
+        return logits, new_cache, kvs
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    """Preallocated (padded) cache for the dense decode path."""
+    dt = jnp.dtype(cfg.dtype)
+    n_attn = cfg.n_attention_applications
+    k = v = None
+    if n_attn:
+        k = jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt)
+        v = jnp.zeros_like(k)
+    def _stack(template, *dims):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, dims + a.shape), template
+        )
+
+    ssm_states = None
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_mamba_per_block
+        ssm_states = _stack(
+            ssm.init_ssm_state(cfg, batch), n_super, cfg.hybrid_mamba_per_block
+        )
+    elif cfg.family == "ssm":
+        every = cfg.xlstm_slstm_every or (cfg.n_layers + 1)
+        n_super = max(cfg.n_layers // every, 1)
+        m_per = (cfg.n_layers // n_super) - 1
+        mst = _stack(xlstm.init_mlstm_state(cfg, batch), n_super, m_per)
+        sst = _stack(xlstm.init_slstm_state(cfg, batch), n_super)
+        ssm_states = (mst, sst)
+    return Cache(
+        k=k, v=v, length=jnp.zeros((batch,), jnp.int32), ssm=ssm_states
+    )

@@ -1,0 +1,332 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel prefill) and sLSTM
+(scalar memory, inherently sequential scan — xLSTM paper §2.3).
+
+The mLSTM chunkwise form mirrors the TFLA formulation with max-stabilized
+exponential gating; the chunk-final (C, n, m) state is the sequence-parallel
+handoff object (core/ring.py). Decode is an O(1) recurrent step for both.
+
+Simplifications vs. the reference implementation (noted in DESIGN.md): no
+causal conv preceding q/k, single projection block wrapper for both cell
+types. Numerics (stabilizers, gating) follow the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray  # [B, H, Dv, Dk] f32 matrix memory
+    n: jnp.ndarray  # [B, H, Dk] f32 normalizer
+    m: jnp.ndarray  # [B, H] f32 stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # [B, D_in] f32
+    n: jnp.ndarray  # [B, D_in]
+    h: jnp.ndarray  # [B, D_in]
+    m: jnp.ndarray  # [B, D_in]
+
+
+def _d_inner(cfg) -> int:
+    return int(cfg.xlstm_proj_factor * cfg.d_model)
+
+
+# ------------------------------------------------------------------ mLSTM
+
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d, d_in = cfg.d_model, _d_inner(cfg)
+    h = cfg.n_heads
+    ks = layers.split_keys(key, 8)
+    return {
+        "w_up": layers.normal_init(ks[0], (d, 2 * d_in), dtype),
+        "w_q": layers.normal_init(ks[1], (d_in, d_in), dtype),
+        "w_k": layers.normal_init(ks[2], (d_in, d_in), dtype),
+        "w_v": layers.normal_init(ks[3], (d_in, d_in), dtype),
+        "w_o": layers.normal_init(ks[4], (d_in, d_in), dtype),
+        "w_if": layers.normal_init(ks[5], (d_in, 2 * h), dtype, scale=0.1),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # forget-bias init
+        "w_down": layers.normal_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    d_in = _d_inner(cfg)
+    h = cfg.n_heads
+    dh = d_in // h
+    up = jnp.einsum("btd,de->bte", x, p["w_up"])
+    xm, z = up[..., :d_in], up[..., d_in:]
+    q = jnp.einsum("bte,ef->btf", xm, p["w_q"]).reshape(*x.shape[:2], h, dh)
+    k = jnp.einsum("bte,ef->btf", xm, p["w_k"]).reshape(*x.shape[:2], h, dh)
+    v = jnp.einsum("bte,ef->btf", xm, p["w_v"]).reshape(*x.shape[:2], h, dh)
+    o = jax.nn.sigmoid(jnp.einsum("bte,ef->btf", xm, p["w_o"]))
+    gif = jnp.einsum("bte,eg->btg", xm, p["w_if"]).astype(jnp.float32)
+    ig = gif[..., :h] + p["b_i"]
+    fg = gif[..., h:] + p["b_f"]
+    return q, k, v, o, ig, fg, z, dh
+
+
+def mlstm_chunkwise(
+    q, k, v, ig, fg, chunk: int, state: Optional[MLSTMState] = None
+) -> Tuple[jnp.ndarray, MLSTMState]:
+    """q,k,v: [B,T,H,Dh]; ig,fg: [B,T,H] raw gates. Returns ([B,T,H,Dh], state)."""
+    bsz, t_orig, h, dh = q.shape
+    # pad to chunk multiple: i-gate -> -inf (no contribution), f-gate -> +40
+    # (log sigmoid ~ 0, state passes through unchanged).
+    pad = (-t_orig) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=40.0)
+    t = t_orig + pad
+    nc = t // chunk
+    scale = dh**-0.5
+    qf = q.astype(jnp.float32) * scale
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg)  # [B,T,H]
+
+    def rs(a):  # [B,T,...] -> [nc, B, L, ...]
+        return jnp.moveaxis(a.reshape(bsz, nc, chunk, *a.shape[2:]), 1, 0)
+
+    qc, kc, vc = rs(qf), rs(kf), rs(vf)
+    gc, lfc = rs(ig.astype(jnp.float32)), rs(logf)
+
+    if state is None:
+        state = init_mlstm_state_raw(bsz, h, dh, dh)
+    ii = jnp.arange(chunk)
+    tri = ii[:, None] >= ii[None, :]  # causal within chunk
+
+    def body(carry, inputs):
+      with jax.named_scope("mlstm_chunk_body"):
+        c_prev, n_prev, m_prev = carry
+        qk_, kk_, vk_, gk_, lfk_ = inputs  # [B,L,H,dh] / [B,L,H]
+        b = jnp.cumsum(lfk_, axis=1)  # [B,L,H] inclusive cumsum of logf
+        # stabilizers
+        gmb = gk_ - b  # g_j - b_j
+        m_intra = b + jax.lax.cummax(gmb, axis=1)  # [B,L,H]
+        m_inter = b + m_prev[:, None, :]
+        m_i = jnp.maximum(m_intra, m_inter)  # [B,L,H]
+        # inter-chunk contribution
+        w_inter = jnp.exp(m_inter - m_i)  # [B,L,H]
+        num_inter = jnp.einsum("blhk,bhvk->blhv", qk_, c_prev) * w_inter[..., None]
+        den_inter = jnp.einsum("blhk,bhk->blh", qk_, n_prev) * w_inter
+        # intra-chunk scores
+        s = jnp.einsum("bihk,bjhk->bijh", qk_, kk_)  # [B,L,L,H]
+        dmat = b[:, :, None, :] - b[:, None, :, :] + gk_[:, None, :, :] - m_i[:, :, None, :]
+        s = s * jnp.where(tri[None, :, :, None], jnp.exp(dmat), 0.0)
+        num = num_inter + jnp.einsum("bijh,bjhv->bihv", s, vk_)
+        den = den_inter + jnp.sum(s, axis=2)  # [B,L,H]
+        hshape = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # chunk-final state
+        btot = b[:, -1, :]  # [B,H]
+        m_loc = jnp.max(btot[:, None, :] - b + gk_, axis=1)  # [B,H]
+        m_new = jnp.maximum(btot + m_prev, m_loc)
+        wj = jnp.exp(btot[:, None, :] - b + gk_ - m_new[:, None, :])  # [B,L,H]
+        c_new = c_prev * jnp.exp(btot + m_prev - m_new)[:, :, None, None] + jnp.einsum(
+            "blh,blhv,blhk->bhvk", wj, vk_, kk_
+        )
+        n_new = n_prev * jnp.exp(btot + m_prev - m_new)[:, :, None] + jnp.einsum(
+            "blh,blhk->bhk", wj, kk_
+        )
+        return (c_new, n_new, m_new), hshape
+
+    (c, n, m), hs = jax.lax.scan(body, (state.c, state.n, state.m), (qc, kc, vc, gc, lfc))
+    out = jnp.moveaxis(hs, 0, 1).reshape(bsz, t, h, dh)[:, :t_orig]
+    return out.astype(q.dtype), MLSTMState(c, n, m)
+
+
+def mlstm_state_only(
+    k, v, ig, fg, chunk: int, state: Optional[MLSTMState] = None
+) -> Tuple[MLSTMState, jnp.ndarray]:
+    """Segment-state fold for sequence parallelism: chunk-final (C, n, m)
+    from `state` (default zero/-inf identity) plus the segment's total
+    log-forget mass btot [B,H]. Skips all output math."""
+    bsz, t_orig, h, dh = k.shape
+    pad = (-t_orig) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=40.0)
+    t = t_orig + pad
+    nc = t // chunk
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+
+    def rs(a):
+        return jnp.moveaxis(a.reshape(bsz, nc, chunk, *a.shape[2:]), 1, 0)
+
+    kc, vc, gc, lfc = rs(kf), rs(vf), rs(ig.astype(jnp.float32)), rs(logf)
+    if state is None:
+        state = init_mlstm_state_raw(bsz, h, dh, dh)
+
+    def body(carry, inputs):
+        c_prev, n_prev, m_prev, bacc = carry
+        kk_, vk_, gk_, lfk_ = inputs
+        b = jnp.cumsum(lfk_, axis=1)
+        btot = b[:, -1, :]
+        m_loc = jnp.max(btot[:, None, :] - b + gk_, axis=1)
+        m_new = jnp.maximum(btot + m_prev, m_loc)
+        wj = jnp.exp(btot[:, None, :] - b + gk_ - m_new[:, None, :])
+        scale = jnp.exp(btot + m_prev - m_new)
+        c_new = c_prev * scale[:, :, None, None] + jnp.einsum(
+            "blh,blhv,blhk->bhvk", wj, vk_, kk_
+        )
+        n_new = n_prev * scale[:, :, None] + jnp.einsum("blh,blhk->bhk", wj, kk_)
+        return (c_new, n_new, m_new, bacc + btot), None
+
+    (c, n, m, btot), _ = jax.lax.scan(
+        body,
+        (state.c, state.n, state.m, jnp.zeros((bsz, h), jnp.float32)),
+        (kc, vc, gc, lfc),
+    )
+    return MLSTMState(c, n, m), btot
+
+
+def mlstm_combine_states(
+    s1: MLSTMState, s2: MLSTMState, btot2: jnp.ndarray
+) -> MLSTMState:
+    """Monoid combine: s1 followed by a segment with state s2 / log-forget
+    mass btot2 (max-stabilized log-space)."""
+    m = jnp.maximum(s1.m + btot2, s2.m)
+    w1 = jnp.where(jnp.isinf(s1.m), 0.0, jnp.exp(s1.m + btot2 - jnp.where(jnp.isinf(m), 0.0, m)))
+    w2 = jnp.where(jnp.isinf(s2.m), 0.0, jnp.exp(s2.m - jnp.where(jnp.isinf(m), 0.0, m)))
+    return MLSTMState(
+        c=s1.c * w1[..., None, None] + s2.c * w2[..., None, None],
+        n=s1.n * w1[..., None] + s2.n * w2[..., None],
+        m=m,
+    )
+
+
+def mlstm_step(q, k, v, ig, fg, state: MLSTMState) -> Tuple[jnp.ndarray, MLSTMState]:
+    """One decode step. q,k,v [B,H,Dh]; ig,fg [B,H]."""
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32) * dh**-0.5
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    igf = ig.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state.m, igf)
+    fprime = jnp.exp(logf + state.m - m_new)
+    iprime = jnp.exp(igf - m_new)
+    c = state.c * fprime[..., None, None] + iprime[..., None, None] * jnp.einsum(
+        "bhv,bhk->bhvk", vf, kf
+    )
+    n = state.n * fprime[..., None] + iprime[..., None] * kf
+    num = jnp.einsum("bhk,bhvk->bhv", qf, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)), jnp.exp(-m_new))
+    return (num / den[..., None]).astype(q.dtype), MLSTMState(c, n, m_new)
+
+
+def mlstm_block_forward(p, x, cfg, state=None, *, chunk: Optional[int] = None):
+    """x: [B,T,d] (post-norm). Returns (out [B,T,d], MLSTMState)."""
+    q, k, v, o, ig, fg, z, dh = _mlstm_qkvif(p, x, cfg)
+    ck = chunk or (cfg.ssm_chunk if cfg.ssm_chunk else 64)
+    ck = min(ck, x.shape[1])
+    htilde, st = mlstm_chunkwise(q, k, v, ig, fg, ck, state)
+    h = htilde.reshape(*x.shape[:2], -1) * o
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", h, p["w_down"]), st
+
+
+def mlstm_block_step(p, x, cfg, state: MLSTMState):
+    """x: [B,1,d]."""
+    q, k, v, o, ig, fg, z, dh = _mlstm_qkvif(p, x, cfg)
+    htilde, st = mlstm_step(q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0], state)
+    h = htilde.reshape(x.shape[0], 1, -1) * o
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", h, p["w_down"]), st
+
+
+def init_mlstm_state_raw(b, h, dv, dk) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((b, h, dv, dk), jnp.float32),
+        n=jnp.zeros((b, h, dk), jnp.float32),
+        m=jnp.full((b, h), -jnp.inf, jnp.float32),
+    )
+
+
+def init_mlstm_state(cfg, batch: int) -> MLSTMState:
+    dh = _d_inner(cfg) // cfg.n_heads
+    return init_mlstm_state_raw(batch, cfg.n_heads, dh, dh)
+
+
+# ------------------------------------------------------------------ sLSTM
+
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d, d_in = cfg.d_model, _d_inner(cfg)
+    h = cfg.n_heads
+    dh = d_in // h
+    ks = layers.split_keys(key, 8)
+    return {
+        "w_up": layers.normal_init(ks[0], (d, 2 * d_in), dtype),
+        "w_zifo": layers.normal_init(ks[1], (d_in, 4 * d_in), dtype),
+        "r_zifo": layers.normal_init(ks[2], (4, h, dh, dh), dtype, scale=0.05),
+        "b_zifo": jnp.zeros((4 * d_in,), jnp.float32),
+        "w_down": layers.normal_init(ks[3], (d_in, d), dtype),
+    }
+
+
+def slstm_scan(p, xm, cfg, state: SLSTMState) -> Tuple[jnp.ndarray, SLSTMState]:
+    """xm: [B,T,d_in] pre-activations input; sequential over T."""
+    d_in = _d_inner(cfg)
+    h = cfg.n_heads
+    dh = d_in // h
+    wx = jnp.einsum("bte,ef->btf", xm, p["w_zifo"]).astype(jnp.float32)  # [B,T,4*d_in]
+
+    def body(carry, wxt):
+      with jax.named_scope("slstm_step_body"):
+        c, n, hid, m = carry
+        hh = hid.reshape(-1, h, dh)
+        rec = jnp.einsum("bhd,ghde->bghe", hh, p["r_zifo"].astype(jnp.float32))
+        rec = rec.reshape(-1, 4 * d_in)
+        pre = wxt + rec + p["b_zifo"]
+        zt = jnp.tanh(pre[:, :d_in])
+        it = pre[:, d_in : 2 * d_in]
+        ft = pre[:, 2 * d_in : 3 * d_in]
+        ot = jax.nn.sigmoid(pre[:, 3 * d_in :])
+        m_new = jnp.maximum(ft + m, it)
+        iprime = jnp.exp(it - m_new)
+        fprime = jnp.exp(ft + m - m_new)
+        c_new = fprime * c + iprime * zt
+        n_new = fprime * n + iprime
+        h_new = ot * (c_new / n_new)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    xs = jnp.moveaxis(wx, 1, 0)  # [T,B,4d_in]
+    (c, n, hid, m), hs = jax.lax.scan(body, tuple(state), xs)
+    out = jnp.moveaxis(hs, 0, 1)  # [B,T,d_in]
+    return out.astype(xm.dtype), SLSTMState(c, n, hid, m)
+
+
+def slstm_block_forward(p, x, cfg, state=None):
+    d_in = _d_inner(cfg)
+    up = jnp.einsum("btd,de->bte", x, p["w_up"])
+    xm, z = up[..., :d_in], up[..., d_in:]
+    if state is None:
+        state = init_slstm_state(cfg, x.shape[0])
+    hseq, st = slstm_scan(p, xm, cfg, state)
+    h = hseq * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", h, p["w_down"]), st
+
+
+def slstm_block_step(p, x, cfg, state: SLSTMState):
+    return slstm_block_forward(p, x, cfg, state)
+
+
+def init_slstm_state(cfg, batch: int) -> SLSTMState:
+    d_in = _d_inner(cfg)
+    return SLSTMState(
+        c=jnp.zeros((batch, d_in), jnp.float32),
+        n=jnp.full((batch, d_in), 1e-6, jnp.float32),
+        h=jnp.zeros((batch, d_in), jnp.float32),
+        m=jnp.zeros((batch, d_in), jnp.float32),
+    )

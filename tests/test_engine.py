@@ -1,0 +1,160 @@
+"""Serving engine: sim + real mode invariants, oracle-token equivalence,
+fault tolerance, checkpoint/restore, baselines."""
+import copy
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import (
+    ChunkedPrefillEngine,
+    FixedGroupsEngine,
+    PDDisaggEngine,
+    StaticTPEngine,
+)
+from repro.configs import REGISTRY, reduced
+from repro.data import poisson_workload, with_prompts
+from repro.engine.request import Phase, Request
+from repro.engine.server import LoongServeEngine
+from repro.models import build_model
+
+CFG = REGISTRY["lwm-7b"]
+
+
+def _workload(n=30, seed=3):
+    return poisson_workload("mixed", n, rate=0.5, seed=seed)
+
+
+def test_sim_engine_completes_all_zero_scaling_migration():
+    eng = LoongServeEngine(CFG, 8, 250_000)
+    reqs = _workload()
+    for r in reqs:
+        eng.submit(r)
+    m = eng.run()
+    assert len(m.finished) == len(reqs)
+    assert m.scaling_migration_bytes == 0  # ESP's zero-overhead invariant
+    assert all(r.phase == Phase.FINISHED for r in m.finished)
+    assert all(r.generated == r.max_new_tokens for r in m.finished)
+
+
+def test_real_engine_tokens_match_oracle():
+    cfg = reduced(CFG)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = LoongServeEngine(cfg, 4, 2000, store_values=True, model=model,
+                           params=params)
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i in range(4):
+        ln = int(rng.integers(16, 80))
+        r = Request(input_len=ln, max_new_tokens=6, arrival=i * 0.01,
+                    prompt=rng.integers(0, cfg.vocab_size, ln).tolist())
+        reqs.append(r)
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        toks = jnp.asarray(np.asarray(r.prompt)[None], jnp.int32)
+        logits, cache = model.prefill(params, {"tokens": toks})
+        nxt = int(np.argmax(np.asarray(logits[0, -1])))
+        out = [nxt]
+        S = r.input_len + 8
+        k_pad = jnp.zeros((cache.k.shape[0], 1, S) + cache.k.shape[3:],
+                          cache.k.dtype).at[:, :, : r.input_len].set(cache.k)
+        v_pad = jnp.zeros_like(k_pad).at[:, :, : r.input_len].set(cache.v)
+        cache = cache._replace(k=k_pad, v=v_pad)
+        for _ in range(5):
+            logits, cache, kvs = model.decode(params, jnp.asarray([nxt], jnp.int32), cache)
+            pos = int(cache.length[0]) - 1
+            cache = cache._replace(
+                k=cache.k.at[:, :, pos : pos + 1].set(kvs[0]),
+                v=cache.v.at[:, :, pos : pos + 1].set(kvs[1]),
+            )
+            nxt = int(np.argmax(np.asarray(logits[0])))
+            out.append(nxt)
+        assert out == r.output_tokens, (r.rid, out, r.output_tokens)
+
+
+def test_failure_recovery():
+    eng = LoongServeEngine(CFG, 8, 250_000)
+    reqs = _workload(20, seed=5)
+    for r in reqs:
+        eng.submit(r)
+    eng.fail_instance(3, at=2.0)
+    eng.fail_instance(5, at=4.0)
+    eng.join_instance(3, at=50.0)
+    m = eng.run()
+    assert len(m.finished) == len(reqs)  # all complete despite failures
+    assert 5 in eng.failed and 3 not in eng.failed
+
+
+def test_checkpoint_restore_roundtrip():
+    eng = LoongServeEngine(CFG, 8, 250_000)
+    reqs = _workload(16, seed=6)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_time=3.0)
+    done_before = len(eng.metrics.finished)
+    with tempfile.NamedTemporaryFile(suffix=".ckpt") as f:
+        eng.checkpoint(f.name)
+        eng2 = LoongServeEngine(CFG, 8, 250_000)
+        eng2.restore(f.name)
+    m = eng2.run()
+    assert len(m.finished) == len(reqs)
+    assert len(m.finished) >= done_before
+
+
+def test_straggler_mitigation_allocates_around_slow_instance():
+    eng = LoongServeEngine(CFG, 4, 250_000)
+    eng.sib.set_instance_speed(0, 0.25)  # a 4x straggler
+    reqs = _workload(10, seed=8)
+    for r in reqs:
+        eng.submit(r)
+    m = eng.run()
+    assert len(m.finished) == len(reqs)
+
+
+@pytest.mark.parametrize("ctor", [
+    lambda: StaticTPEngine(CFG, 8, 250_000),
+    lambda: ChunkedPrefillEngine(CFG, 8, 250_000),
+    lambda: PDDisaggEngine(CFG, 8, 250_000),
+    lambda: FixedGroupsEngine(CFG, 8, 250_000, groups=[[i] for i in range(8)]),
+])
+def test_baselines_complete(ctor):
+    eng = ctor()
+    reqs = poisson_workload("sharegpt", 20, rate=2.0, seed=9)
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    m = eng.run()
+    assert len(m.finished) + m.rejected >= 19  # replicated groups may reject
+
+
+def test_pd_disagg_rejects_what_unified_pool_serves():
+    """Paper §7.2: PD-disagg OOMs on long requests (half the memory per
+    phase); LoongServe's unified pool serves them."""
+    long_req = Request(input_len=1_300_000, max_new_tokens=16)
+    pd = PDDisaggEngine(CFG, 8, 200_000)
+    pd.submit(copy.deepcopy(long_req))
+    mpd = pd.run()
+    ls = LoongServeEngine(CFG, 8, 200_000)
+    ls.submit(copy.deepcopy(long_req))
+    mls = ls.run()
+    assert mpd.rejected == 1 or len(mpd.finished) == 0
+    assert len(mls.finished) == 1
+
+
+def test_loongserve_beats_baselines_on_long_context():
+    reqs = poisson_workload("lveval", 40, rate=0.15, seed=7)
+    results = {}
+    for name, ctor in [
+        ("loongserve", lambda: LoongServeEngine(CFG, 8, 250_000)),
+        ("vllm", lambda: StaticTPEngine(CFG, 8, 250_000)),
+        ("pd", lambda: PDDisaggEngine(CFG, 8, 250_000)),
+    ]:
+        eng = ctor()
+        for r in copy.deepcopy(reqs):
+            eng.submit(r)
+        results[name] = eng.run().summary()
+    assert results["loongserve"]["norm_e2e_mean"] < results["vllm"]["norm_e2e_mean"]
+    assert results["loongserve"]["norm_e2e_mean"] < results["pd"]["norm_e2e_mean"]

@@ -1,0 +1,107 @@
+"""Distributed KV pool: token granularity, fragmentation, migration,
+placement properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.configs import REGISTRY, reduced
+from repro.kvcache import DistributedKVPool, KVPool, OutOfSlots
+
+CFG = reduced(REGISTRY["lwm-7b"])
+
+
+def test_paper_fig4_fragmentation():
+    """Fig. 4: free slots 1+2+3 across instances; a 6-token request fits the
+    unified pool but not any locality-constrained single instance."""
+    dp = DistributedKVPool(CFG, 4, 100, store_values=False)
+    for i, used in enumerate([99, 98, 97, 100]):
+        dp.pools[i].alloc(1000 + i, list(range(used)))
+    assert dp.total_free == 6
+    assert dp.max_contiguous_request() == 3
+    assert dp.fragmentation_waste() == 3
+    plan = dp.plan_placement(7, list(range(6)), [0, 1, 2, 3])
+    assert plan.n_tokens == 6
+    dp.place(plan)
+    assert dp.total_free == 0
+
+
+@given(
+    frees=stst.lists(stst.integers(0, 50), min_size=2, max_size=6),
+    n_tok=stst.integers(1, 120),
+    seed=stst.integers(0, 100),
+)
+@settings(max_examples=40, deadline=None)
+def test_placement_plan_properties(frees, n_tok, seed):
+    n = len(frees)
+    dp = DistributedKVPool(CFG, n, 64, store_values=False)
+    for i, f in enumerate(frees):
+        used = 64 - min(f, 64)
+        if used:
+            dp.pools[i].alloc(1000 + i, list(range(used)))
+    targets = list(range(n))
+    total_free = dp.total_free
+    if n_tok > total_free:
+        with pytest.raises(OutOfSlots):
+            dp.plan_placement(1, list(range(n_tok)), targets)
+        return
+    plan = dp.plan_placement(1, list(range(n_tok)), targets)
+    # covers every token exactly once
+    toks = sorted(t for ts in plan.assignment.values() for t in ts)
+    assert toks == list(range(n_tok))
+    # respects per-instance free space
+    for i, ts in plan.assignment.items():
+        assert len(ts) <= dp.pools[i].free_slots
+    dp.place(plan)
+    assert dp.request_tokens(1) == n_tok
+
+
+def test_values_roundtrip_and_migration():
+    dp = DistributedKVPool(CFG, 4, 64)
+    n_attn = max(CFG.n_attention_applications, 1)
+    k = np.random.default_rng(0).normal(
+        size=(n_attn, 20, CFG.n_kv_heads, CFG.head_dim)
+    )
+    plan = dp.plan_placement(5, list(range(20)), [0, 1, 2, 3])
+    dp.place(plan, k, k + 1)
+    pos, kk, vv = dp.gather_request(5)
+    assert pos.tolist() == list(range(20))
+    np.testing.assert_allclose(kk, k, atol=1e-6)
+    np.testing.assert_allclose(vv, k + 1, atol=1e-6)
+    src = plan.instances()[0]
+    moved = dp.migrate_request(5, src, [0, 1, 2, 3])
+    assert moved > 0 and dp.migrated_bytes == moved
+    pos2, k2, v2 = dp.gather_request(5)
+    np.testing.assert_allclose(k2, k, atol=1e-6)
+    assert not dp.pools[src].tokens_of(5)
+
+
+def test_fill_reserved_slots():
+    pool = KVPool(CFG, 32)
+    pool.alloc(1, [0, 1, 2])
+    n_attn = max(CFG.n_attention_applications, 1)
+    k = np.ones((n_attn, 3, CFG.n_kv_heads, CFG.head_dim))
+    pool.fill(1, [0, 1, 2], k, 2 * k)
+    pos, kk, vv = pool.gather(1)
+    np.testing.assert_allclose(kk, 1.0)
+    np.testing.assert_allclose(vv, 2.0)
+
+
+def test_swa_window_eviction():
+    pool = KVPool(CFG, 16, store_values=False)
+    pool.alloc(1, list(range(10)))
+    freed = pool.free_positions(1, [0, 1, 2, 3])
+    assert freed == 4
+    assert pool.free_slots == 16 - 6
+    assert sorted(pool.tokens_of(1)) == [4, 5, 6, 7, 8, 9]
+
+
+def test_alloc_free_invariants():
+    pool = KVPool(CFG, 8, store_values=False)
+    pool.alloc(1, [0, 1, 2])
+    pool.alloc(2, [0, 1])
+    with pytest.raises(OutOfSlots):
+        pool.alloc(3, list(range(5)))
+    assert pool.free_request(1) == 3
+    assert pool.free_slots == 6
+    pool.alloc(3, list(range(5)))
+    assert pool.used == 7

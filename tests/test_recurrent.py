@@ -1,0 +1,130 @@
+"""Mamba2 / xLSTM equivalences: chunked-parallel prefill vs recurrent decode,
+state-only folds vs full pass (the SP handoff's correctness basis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.configs import REGISTRY, reduced
+from repro.models import ssm, xlstm
+
+
+@pytest.fixture(scope="module")
+def mamba_setup():
+    cfg = reduced(REGISTRY["zamba2-2.7b"])
+    p = ssm.init_mamba2(
+        jax.random.PRNGKey(0), cfg.d_model, expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+        conv_width=cfg.ssm_conv_width, dtype=jnp.float32,
+    )
+    return cfg, p
+
+
+def test_mamba_chunked_equals_stepwise(mamba_setup):
+    cfg, p = mamba_setup
+    b, t = 2, 37
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, cfg.d_model)) * 0.1
+    y_full, st_full = ssm.mamba2_forward(p, x, cfg, None)
+    st = ssm.init_ssm_state(cfg, b)
+    ys = []
+    for i in range(t):
+        y, st = ssm.mamba2_decode_step(p, x[:, i : i + 1], cfg, st)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_full),
+                               atol=3e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st.h), np.asarray(st_full.h),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_mamba_state_only_matches_full(mamba_setup):
+    cfg, p = mamba_setup
+    b, t, chunk = 2, 64, 16
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = jax.random.normal(ks[0], (b, t, nh, cfg.ssm_head_dim))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, nh)))
+    a = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, t, cfg.ssm_state))
+    cc = jax.random.normal(ks[0], (b, t, cfg.ssm_state))
+    _, h_full = ssm.ssd_chunk_scan(x, dt, a, bb, cc, chunk)
+    h_seg, d_seg = ssm.ssd_state_only(x, dt, a, bb, chunk)
+    np.testing.assert_allclose(np.asarray(h_seg), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-5)
+    # decay_seg: state with nonzero init evolves as h*decay + h_seg
+    h0 = jax.random.normal(ks[1], h_full.shape)
+    _, h_with = ssm.ssd_chunk_scan(x, dt, a, bb, cc, chunk, h0)
+    np.testing.assert_allclose(
+        np.asarray(h_with),
+        np.asarray(h0 * d_seg[:, :, None, None] + h_seg),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@given(t=stst.sampled_from([15, 32, 51]), chunk=stst.sampled_from([8, 16]),
+       seed=stst.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_chunkwise_equals_stepwise(t, chunk, seed):
+    b, h, dh = 1, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, t, h, dh))
+    k = jax.random.normal(ks[1], (b, t, h, dh))
+    v = jax.random.normal(ks[2], (b, t, h, dh))
+    ig = jax.random.normal(ks[3], (b, t, h))
+    fg = jax.random.normal(ks[4], (b, t, h)) + 2.0
+    out_c, st_c = xlstm.mlstm_chunkwise(q, k, v, ig, fg, chunk)
+    st = xlstm.init_mlstm_state_raw(b, h, dh, dh)
+    outs = []
+    for i in range(t):
+        o, st = xlstm.mlstm_step(q[:, i], k[:, i], v[:, i], ig[:, i],
+                                 fg[:, i], st)
+        outs.append(o[:, None])
+    out_s = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_s),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_c.c), np.asarray(st.c),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_mlstm_state_only_and_combine():
+    b, h, dh, t, chunk = 1, 2, 8, 48, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (b, t, h, dh))
+    k = jax.random.normal(ks[1], (b, t, h, dh))
+    v = jax.random.normal(ks[2], (b, t, h, dh))
+    ig = jax.random.normal(ks[3], (b, t, h))
+    fg = jax.random.normal(ks[4], (b, t, h)) + 2.0
+    _, st_full = xlstm.mlstm_chunkwise(q, k, v, ig, fg, chunk)
+    st_only, btot = xlstm.mlstm_state_only(k, v, ig, fg, chunk)
+    np.testing.assert_allclose(np.asarray(st_only.c), np.asarray(st_full.c),
+                               atol=1e-4, rtol=1e-3)
+    # monoid: state(first half) ∘ segment(second half) == state(full)
+    half = t // 2
+    s1, _ = xlstm.mlstm_state_only(k[:, :half], v[:, :half], ig[:, :half],
+                                   fg[:, :half], chunk)
+    s2, b2 = xlstm.mlstm_state_only(k[:, half:], v[:, half:], ig[:, half:],
+                                    fg[:, half:], chunk)
+    comb = xlstm.mlstm_combine_states(s1, s2, b2)
+    np.testing.assert_allclose(np.asarray(comb.c), np.asarray(st_full.c),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(comb.n), np.asarray(st_full.n),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_slstm_step_equals_scan():
+    cfg = reduced(REGISTRY["xlstm-350m"])
+    p = xlstm.init_slstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, t = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, t, cfg.d_model)) * 0.3
+    y_full, st_full = xlstm.slstm_block_forward(p, x, cfg, None)
+    st = xlstm.init_slstm_state(cfg, b)
+    ys = []
+    for i in range(t):
+        y, st = xlstm.slstm_block_step(p, x[:, i : i + 1], cfg, st)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, axis=1)), np.asarray(y_full),
+        atol=1e-4, rtol=1e-3,
+    )

@@ -1,0 +1,228 @@
+"""Four-step scheduler: DP batching vs brute force, SIB fit accuracy,
+dispatch/allocation/scaling behaviors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.configs import REGISTRY
+from repro.engine.request import Request
+from repro.kvcache import DistributedKVPool
+from repro.manager import (
+    SIB,
+    DecodeBatch,
+    GlobalManager,
+    ManagerConfig,
+    dp_batching,
+    dp_batching_naive,
+    make_prefill_cost,
+)
+
+CFG = REGISTRY["lwm-7b"]
+
+
+# ------------------------------------------------------------- DP batching
+@given(
+    lens=stst.lists(stst.integers(100, 100_000), min_size=1, max_size=7),
+    caps=stst.lists(stst.integers(10_000, 200_000), min_size=1, max_size=6),
+    seed=stst.integers(0, 50),
+)
+@settings(max_examples=30, deadline=None)
+def test_dp_monotone_safety_properties(lens, caps, seed):
+    """The windowed DP never (a) beats the true optimum, (b) declares an
+    instance infeasible that the exhaustive DP can solve."""
+    sib = SIB(CFG)
+    lens = sorted(lens, reverse=True)
+    caps = sorted(caps)
+    cost = make_prefill_cost(sib, lens)
+    v_fast, _ = dp_batching(lens, caps, cost, monotone=True)
+    v_naive, _ = dp_batching_naive(lens, caps, cost)
+    if v_naive == float("inf"):
+        assert v_fast == float("inf")
+    else:
+        assert v_fast < float("inf")
+        assert v_naive <= v_fast + 1e-15
+
+
+def test_dp_monotone_statistical_quality():
+    """REPRODUCTION FINDING (EXPERIMENTS.md §Notes): the paper's Eq. 6
+    monotone-window speedup is exact only under quadrangle-inequality cost
+    structure, which our fitted/napkin SIB cost violates on a few % of
+    instances. We pin the heuristic's quality distribution instead: mean
+    within 1%, p95 within 10% of the exhaustive optimum."""
+    import random
+
+    sib = SIB(CFG)
+    rnd = random.Random(42)
+    ratios = []
+    for _ in range(300):
+        n, m = rnd.randint(1, 6), rnd.randint(1, 5)
+        lens = sorted((rnd.randint(100, 100_000) for _ in range(n)), reverse=True)
+        caps = sorted(rnd.randint(10_000, 200_000) for _ in range(m))
+        cost = make_prefill_cost(sib, lens)
+        v_fast, _ = dp_batching(lens, caps, cost, monotone=True)
+        v_naive, _ = dp_batching_naive(lens, caps, cost)
+        if v_naive == float("inf"):
+            continue
+        ratios.append(v_fast / v_naive)
+    assert ratios
+    ratios.sort()
+    mean = sum(ratios) / len(ratios)
+    p95 = ratios[int(len(ratios) * 0.95)]
+    assert mean < 1.01, mean
+    assert p95 < 1.10, p95
+
+
+@given(
+    lens=stst.lists(stst.integers(100, 50_000), min_size=1, max_size=6),
+    m=stst.integers(1, 5),
+    seed=stst.integers(0, 50),
+)
+@settings(max_examples=25, deadline=None)
+def test_dp_monotone_bounded_suboptimality(lens, m, seed):
+    """REPRODUCTION FINDING (EXPERIMENTS.md §Notes): the paper's Eq. 6
+    monotone-split speedup is exact only under quadrangle-inequality cost
+    structure; our fitted/napkin SIB cost violates QI on ~9% of random
+    instances. The windowed DP is therefore a heuristic — we pin its
+    suboptimality to <=10% and its cost to never beat the exact optimum."""
+    sib = SIB(CFG)
+    lens = sorted(lens, reverse=True)
+    caps = [10_000_000] * m  # capacity never binds
+    cost = make_prefill_cost(sib, lens)
+    v_fast, _ = dp_batching(lens, caps, cost, monotone=True)
+    v_naive, _ = dp_batching_naive(lens, caps, cost)
+    assert v_naive <= v_fast + 1e-15
+    assert v_fast <= v_naive * 1.10, (lens, m, v_fast, v_naive)
+
+
+def test_dp_batching_respects_capacity():
+    sib = SIB(CFG)
+    lens = [50_000, 40_000, 1_000]
+    caps = [30_000, 30_000, 60_000]
+    cost = make_prefill_cost(sib, lens)
+    val, splits = dp_batching(lens, caps, cost)
+    assert splits, "feasible split must exist"
+    d = [0] + list(np.cumsum(lens))
+    v = [0] + list(np.cumsum(caps))
+    for s in splits:
+        need = d[s.req_hi] - d[s.req_lo]
+        have = v[s.inst_hi] - v[s.inst_lo]
+        assert need <= have
+    # all requests covered exactly once, instances disjoint
+    covered = sorted(
+        i for s in splits for i in range(s.req_lo, s.req_hi)
+    )
+    assert covered == list(range(len(lens)))
+
+
+def test_dp_infeasible_returns_empty():
+    sib = SIB(CFG)
+    lens = [100_000]
+    caps = [10_000, 10_000]
+    val, splits = dp_batching(lens, caps, make_prefill_cost(sib, lens))
+    assert val == float("inf") and splits == []
+
+
+# --------------------------------------------------------------------- SIB
+def test_sib_fit_accuracy():
+    """Fig. 14: fitted analytical model within 10% on held-out batches."""
+    sib = SIB(CFG)
+    rng = np.random.default_rng(0)
+    alpha, beta, gamma = 0.004, 2.1e-6, 3.3e-12
+    for _ in range(30):
+        lens = rng.integers(500, 150_000, rng.integers(1, 5))
+        s1, s2 = float(lens.sum()), float((lens.astype(float) ** 2).sum())
+        t = alpha + beta * s1 + gamma * s2
+        sib.record_prefill(4, list(lens), t * (1 + rng.normal() * 0.02))
+    errs = []
+    for _ in range(20):
+        lens = rng.integers(500, 150_000, rng.integers(1, 5))
+        s1, s2 = float(lens.sum()), float((lens.astype(float) ** 2).sum())
+        truth = alpha + beta * s1 + gamma * s2
+        errs.append(abs(sib.prefill_time(4, list(lens)) - truth) / truth)
+    assert float(np.mean(errs)) < 0.10, np.mean(errs)
+
+
+def test_sib_straggler_model():
+    sib = SIB(CFG)
+    base = sib.prefill_time(4, [10_000], instances=[0, 1, 2, 3])
+    sib.set_instance_speed(2, 0.5)
+    slow = sib.prefill_time(4, [10_000], instances=[0, 1, 2, 3])
+    assert slow == pytest.approx(base * 2)
+    ok = sib.prefill_time(4, [10_000], instances=[0, 1, 3])
+    assert ok == pytest.approx(base * 4 / 3, rel=0.35)  # dop 3 slower but unthrottled
+
+
+def test_decode_time_scales_with_dop():
+    sib = SIB(CFG)
+    t1 = sib.decode_time(1, 8, 1_000_000)
+    t4 = sib.decode_time(4, 8, 1_000_000)
+    assert t4 < t1  # HBM-bound decode gains from more instances
+
+
+# ----------------------------------------------------------- four-step plan
+def _mk_manager(n=8, cap=200_000):
+    sib = SIB(CFG)
+    pool = DistributedKVPool(CFG, n, cap, store_values=False)
+    return GlobalManager(CFG, sib, pool, ManagerConfig()), pool, sib
+
+
+def test_dispatch_respects_memory():
+    gm, pool, _ = _mk_manager(n=2, cap=10_000)
+    big = Request(input_len=50_000, max_new_tokens=10)
+    plan = gm.schedule([big], [], idle_instances=[0, 1], now=0.0)
+    assert not plan.prefill  # cannot fit anywhere
+
+
+def test_proactive_scale_down_targets_and_placement():
+    gm, pool, _ = _mk_manager()
+    req = Request(input_len=100_000, max_new_tokens=64)
+    plan = gm.schedule([req], [], idle_instances=list(range(8)), now=0.0)
+    assert plan.prefill
+    b = plan.prefill[0]
+    assert b.dop >= len(b.scale_down_to) >= 1
+    placed = sum(
+        len(toks) for toks in b.placement[req.rid].values()
+    )
+    assert placed == req.input_len
+    # placement targets are a subset of the scale-down group
+    assert set(b.placement[req.rid]) <= set(b.scale_down_to)
+    # slots were reserved
+    assert pool.request_tokens(req.rid) == req.input_len
+
+
+def test_decode_scale_up_on_memory_pressure():
+    gm, pool, sib = _mk_manager(n=4, cap=1_000)
+    reqs = [Request(input_len=900, max_new_tokens=512) for _ in range(2)]
+    for i, r in enumerate(reqs):
+        pool.pools[i].alloc(r.rid, list(range(900)))
+        r.generated = 1
+    g = DecodeBatch(reqs, [0, 1], {reqs[0].rid: 0, reqs[1].rid: 1})
+    plan = gm.schedule([], [g], idle_instances=[2, 3], now=0.0)
+    assert plan.decode
+    assert len(plan.decode[0].instances) > 2  # scaled up
+
+
+def test_multi_master_assignment_uniform():
+    gm, pool, _ = _mk_manager(n=4)
+    reqs = [Request(input_len=100, max_new_tokens=8) for _ in range(8)]
+    for r in reqs:
+        r.generated = 1
+    masters = gm._assign_masters(reqs, [0, 1, 2, 3])
+    counts = {}
+    for m in masters.values():
+        counts[m] = counts.get(m, 0) + 1
+    assert max(counts.values()) - min(counts.values()) <= 1
+
+
+def test_decode_group_merging():
+    gm, pool, _ = _mk_manager(n=8)
+    a = [Request(input_len=100, max_new_tokens=8) for _ in range(2)]
+    b = [Request(input_len=100, max_new_tokens=8) for _ in range(2)]
+    for r in a + b:
+        r.generated = 1
+    g1 = DecodeBatch(a, [0], {r.rid: 0 for r in a})
+    g2 = DecodeBatch(b, [1], {r.rid: 1 for r in b})
+    plan = gm.schedule([], [g1, g2], idle_instances=[], now=0.0)
+    # alpha-dominated tiny batches -> merged into one group
+    assert len(plan.decode) == 1
+    assert len(plan.decode[0].requests) == 4
