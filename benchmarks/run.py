@@ -303,6 +303,118 @@ def bench_kernels(quick: bool = False):
     _row("kernel_flash_decode", us, f"allclose_err:{err:.1e}")
 
 
+# ------------------------------------------------------- paged decode step
+
+
+def bench_decode_paged(quick: bool = False):
+    """Decode-iteration benchmark on the REAL engine hot path: the legacy
+    gather-dense dataflow (per-request host gather -> dense Cache -> one
+    model.decode per request, i.e. O(batch) dispatches + O(tokens) host
+    traffic per step) vs the batched paged path (block tables -> ONE batched
+    model.decode with one paged launch per instance per layer).  Both arms
+    run the same model, same pools, same DecodeBatch.  Writes
+    BENCH_decode.json."""
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.configs import REGISTRY, reduced
+    from repro.engine.request import Phase, Request
+    from repro.engine.server import LoongServeEngine
+    from repro.kernels import ops
+    from repro.manager.scheduler import DecodeBatch
+    from repro.models import build_model
+
+    cfg = reduced(REGISTRY["lwm-7b"])
+    page = 64
+    b = 8 if quick else 16
+    iters = 3 if quick else 10
+    n_inst = 2
+    rng = np.random.default_rng(0)
+    lengths = np.sort(rng.integers(64, 1025, b))  # ragged cached KV
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    capacity = (-(-int(lengths.sum()) // page) + 16) * page  # per instance
+    eng = LoongServeEngine(cfg, n_inst, capacity, store_values=True,
+                           model=model, params=params, page_size=page)
+    # place ragged cached KV token-granularly across the instances and set up
+    # one ready decode group, exactly as after prefill
+    reqs = []
+    for rid, ln in enumerate(lengths):
+        n = int(ln)
+        r = Request(input_len=n, max_new_tokens=64,
+                    prompt=rng.integers(0, cfg.vocab_size, n).tolist())
+        r.rid, r.generated, r.phase = rid, 1, Phase.DECODE
+        r.output_tokens = [int(rng.integers(0, cfg.vocab_size))]
+        plan = eng.pool.plan_placement(rid, list(range(n)), range(n_inst))
+        k = rng.normal(size=(eng.pool.pools[0].n_attn, n, cfg.n_kv_heads,
+                             cfg.head_dim))
+        eng.pool.place(plan, k, k + 1)
+        reqs.append(r)
+    g = DecodeBatch(reqs, list(range(n_inst)),
+                    {r.rid: r.rid % n_inst for r in reqs})
+    impl = ops.get_default_impl()
+
+    # steady state appends one token's KV per request per iteration; model it
+    # in BOTH arms by re-filling each request's newest cached token so the
+    # paged arm pays its incremental device-mirror sync and the dense arm its
+    # re-gather (same host-side write cost on each side)
+    fills = []
+    for r in reqs:
+        last = r.seq_len - 2
+        inst = next(i for i in range(n_inst)
+                    if last in eng.pool.pools[i].tokens_of(r.rid))
+        kv1 = rng.normal(size=(eng.pool.pools[0].n_attn, 1, cfg.n_kv_heads,
+                               cfg.head_dim))
+        fills.append((eng.pool.pools[inst], r.rid, last, kv1))
+
+    def run_arm(step):
+        step(g)  # warmup / compile
+        ops.reset_dispatch_counts()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            for pool, rid, pos, kv1 in fills:
+                pool.fill(rid, [pos], kv1, kv1)
+            step(g)
+        dt = (time.perf_counter() - t0) / iters
+        return dt, {k: v // iters for k, v in ops.dispatch_counts.items()}
+
+    t_dense, d_dense = run_arm(eng._real_decode_serial)
+    t_paged, d_paged = run_arm(eng._real_decode_paged)
+    results = {
+        "gather_dense": {"s_per_decode_iter": t_dense, "dispatches": d_dense},
+        "paged_batched": {"s_per_decode_iter": t_paged, "dispatches": d_paged},
+    }
+    speedup = t_dense / t_paged
+    out = {
+        "batch": b,
+        "n_instances": n_inst,
+        "page_size": page,
+        "n_layers": int(eng.pool.pools[0].n_attn),
+        "lengths": [int(x) for x in lengths],
+        "kernel_impl": impl,
+        # a decode iteration emits one token per request
+        **{f"{k}_tok_s": float(b / v["s_per_decode_iter"])
+           for k, v in results.items()},
+        **{f"{k}_s_per_iter": v["s_per_decode_iter"]
+           for k, v in results.items()},
+        "dispatches_per_iter": {k: v["dispatches"] for k, v in results.items()},
+        "speedup": speedup,
+    }
+    # quick mode gets its own artifact so it can't clobber the committed one
+    path = "BENCH_decode_quick.json" if quick else "BENCH_decode.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row(
+        "decode_paged_vs_gather",
+        t_paged * 1e6,
+        f"speedup:{speedup:.2f}x;batch:{b};"
+        f"paged_launches:{sum(d_paged.values())}",
+    )
+
+
 # -------------------------------------------------------------- roofline
 
 
@@ -346,6 +458,7 @@ BENCHES = {
     "fig13": bench_scaling_overhead,
     "fig14": bench_analytical_model,
     "kernels": bench_kernels,
+    "decode": bench_decode_paged,
     "roofline": bench_roofline_summary,
 }
 

@@ -1,0 +1,81 @@
+"""Multi-master paged decode: the model-side plug for the paged kernel.
+
+LoongServe §4.2 decodes with elastic instances: each master broadcasts its
+query, every instance computes an unnormalized partial over the KV shard it
+holds, and the master LSE-merges the partials.  `PagedDecodeAttnImpl` is that
+dataflow expressed through the model's pluggable `attn_impl` seam: per layer
+it issues exactly ONE `ops.paged_decode_partial` launch per instance — over
+the instance's pool storage in place, routed by per-request block tables —
+then merges the per-instance partials with the new token's own KV partial.
+No dense per-request gather, and launch count is independent of batch size.
+
+The impl subclasses `DefaultAttnImpl`, so outside a `begin_step`/`end_step`
+window (e.g. prefill, or oracle-style dense decode with an explicit cache) it
+behaves exactly like the default dense math.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models.transformer import DefaultAttnImpl
+
+
+class PagedShard(NamedTuple):
+    """One instance's share of a decode batch.
+
+    k_pages/v_pages: [n_attn, n_pages, P, KVH, D] device mirror of the
+    instance's pool storage; table/lengths: that pool's block table for the
+    batch; pos: [n_pages, P] global position per slot — only needed (and
+    only uploaded) for sliding-window masking."""
+
+    k_pages: jnp.ndarray
+    v_pages: jnp.ndarray
+    table: jnp.ndarray
+    lengths: jnp.ndarray
+    pos: Optional[jnp.ndarray] = None
+
+
+class PagedDecodeAttnImpl(DefaultAttnImpl):
+    """Batched paged decode attention across elastic instances."""
+
+    def __init__(self, impl: Optional[str] = None):
+        self._shards: Optional[List[PagedShard]] = None
+        self._layer = 0
+        self._impl = impl  # kernel impl override (None -> ops default)
+
+    def begin_step(self, shards: List[PagedShard]) -> None:
+        """Arm the paged path for one decode iteration.  decode_attn is
+        called once per layer in stack order; the layer cursor indexes the
+        per-layer storage planes."""
+        self._shards = shards
+        self._layer = 0
+
+    def end_step(self) -> None:
+        self._shards = None
+
+    def decode_attn(self, q, k_cache, v_cache, k_new, v_new, cache_len, *,
+                    window, softcap):
+        if self._shards is None or k_cache is not None:
+            return super().decode_attn(
+                q, k_cache, v_cache, k_new, v_new, cache_len,
+                window=window, softcap=softcap,
+            )
+        li = self._layer
+        self._layer += 1
+        b = q.shape[0]
+        # the query's global position == cached token count (its own KV is
+        # k_new, merged below) — window predicate qp - kp < window
+        qpos = jnp.broadcast_to(jnp.asarray(cache_len), (b,)).astype(jnp.int32)
+        part = attn.partial_attention(q, k_new, v_new, None, softcap=softcap)
+        for s in self._shards:
+            p = ops.paged_decode_partial(
+                q, s.k_pages[li], s.v_pages[li], s.table, s.lengths, s.pos,
+                query_pos=qpos, window=window, softcap=softcap,
+                impl=self._impl,
+            )
+            part = attn.merge_partial(part, p)
+        return attn.finalize_partial(part).astype(q.dtype)

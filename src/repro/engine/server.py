@@ -93,12 +93,14 @@ class BaseServingEngine:
         model=None,
         params=None,
         seed: int = 0,
+        page_size: int = 1,
     ):
         self.cfg = cfg
         self.n = n_instances
         self.capacity = capacity_per_instance
+        self.page_size = page_size
         self.pool = DistributedKVPool(cfg, n_instances, capacity_per_instance,
-                                      store_values)
+                                      store_values, page_size)
         self.sib = SIB(cfg, hw)
         self.clock = 0.0
         self.pending: List[Request] = []
@@ -221,7 +223,8 @@ class BaseServingEngine:
             for j in range(self.n, inst + 1):
                 self.pool.pools.append(
                     type(self.pool.pools[0])(
-                        self.cfg, self.capacity, j, self.pool.pools[0].store_values
+                        self.cfg, self.capacity, j,
+                        self.pool.pools[0].store_values, self.page_size,
                     )
                 )
                 self.busy_until[j] = self.clock
@@ -240,8 +243,7 @@ class BaseServingEngine:
             "failed": self.failed,
             "metrics": self.metrics,
             "req_index": self._req_index,
-            "pool_slots": [p._slots for p in self.pool.pools],
-            "pool_free": [p._free for p in self.pool.pools],
+            "pool_state": [p.state_dict() for p in self.pool.pools],
             "extra": self._checkpoint_extra(),
         }
         with open(path, "wb") as f:
@@ -257,10 +259,8 @@ class BaseServingEngine:
         self.failed = state["failed"]
         self.metrics = state["metrics"]
         self._req_index = state["req_index"]
-        for p, slots, free in zip(
-            self.pool.pools, state["pool_slots"], state["pool_free"]
-        ):
-            p._slots, p._free = slots, free
+        for p, ps in zip(self.pool.pools, state["pool_state"]):
+            p.load_state_dict(ps)
         self._restore_extra(state["extra"])
 
     def _checkpoint_extra(self) -> Any:
@@ -284,6 +284,21 @@ class LoongServeEngine(BaseServingEngine):
         self._real_cache: Dict[int, Any] = {}  # rid -> recurrent state (real)
         self._pending_kv: Dict[int, Any] = {}  # rid -> new kv awaiting alloc
         self._running_decode_ends: Dict[int, float] = {}  # gid -> end time
+        # batched paged decode: the multi-master paged attention impl is
+        # swapped in only around a batched decode step (the model object is
+        # caller-owned and may be shared between engines).  Pure-attention
+        # families only: hybrids/ssm keep the serial per-request path, and
+        # moe stays serial because expert-capacity dropping is batch-size
+        # dependent (batching would change generated tokens).
+        self._paged_impl = None
+        self._kv_mirror: Dict[int, Any] = {}  # instance -> (k_dev, v_dev)
+        self._kv_scatter = None  # lazily-jitted dirty-slot mirror update
+        if self.real and self.cfg.family in ("dense", "vlm"):
+            from repro.core.paged_decode import PagedDecodeAttnImpl
+            from repro.models.transformer import DefaultAttnImpl
+
+            if type(getattr(self.model, "attn_impl", None)) is DefaultAttnImpl:
+                self._paged_impl = PagedDecodeAttnImpl()
 
     # ------------------------------------------------------------- schedule
     def _try_schedule(self) -> None:
@@ -467,6 +482,104 @@ class LoongServeEngine(BaseServingEngine):
                 self._real_cache[r.rid] = cache.ssm
 
     def _real_decode(self, g: DecodeBatch) -> None:
+        if self._paged_impl is not None and self.pool.pools[0].store_values:
+            return self._real_decode_paged(g)
+        return self._real_decode_serial(g)
+
+    def _device_kv(self, pool):
+        """Incrementally-synced device mirror of one pool's (K, V, slot_pos)
+        storage.  Steady-state decode uploads only the slots written since
+        the last iteration (one per request), not the pool."""
+        import jax
+        import jax.numpy as jnp
+
+        full, dirty = pool.consume_dirty()
+        cur = self._kv_mirror.get(pool.instance_id)
+        if cur is None or full:
+            cur = (jnp.asarray(pool.k), jnp.asarray(pool.v),
+                   jnp.asarray(pool.slot_pos))
+        elif len(dirty):
+            if self._kv_scatter is None:
+                # donation keeps the scatter O(dirty) and allocation-free on
+                # accelerators; CPU doesn't implement donation and falls back
+                # to a copy
+                donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+                self._kv_scatter = jax.jit(
+                    lambda kd, vd, pd, idx, kn, vn, pn: (
+                        kd.at[:, idx].set(kn), vd.at[:, idx].set(vn),
+                        pd.at[idx].set(pn),
+                    ),
+                    donate_argnums=donate,
+                )
+            # pad the index vector to a power-of-two bucket (duplicating the
+            # last slot is idempotent) so jit compiles one scatter per bucket
+            # instead of one per distinct dirty count
+            n = len(dirty)
+            bucket = 1 << (n - 1).bit_length()
+            idx = np.concatenate([dirty, np.full(bucket - n, dirty[-1])])
+            cur = self._kv_scatter(
+                cur[0], cur[1], cur[2], jnp.asarray(idx),
+                jnp.asarray(pool.k[:, idx]), jnp.asarray(pool.v[:, idx]),
+                jnp.asarray(pool.slot_pos[idx]),
+            )
+        self._kv_mirror[pool.instance_id] = cur
+        return cur
+
+    def _real_decode_paged(self, g: DecodeBatch) -> None:
+        """Gather-free batched decode: ONE model step for the whole group;
+        per layer, one paged-kernel launch per instance over the pool storage
+        in place (block tables), partials LSE-merged multi-master style."""
+        import jax.numpy as jnp
+
+        from repro.core.paged_decode import PagedShard
+        from repro.models.transformer import Cache
+
+        rids = [r.rid for r in g.requests]
+        n_cached = np.array([r.seq_len - 1 for r in g.requests], np.int32)
+        shards, covered = [], np.zeros(len(rids), np.int64)
+        for pool in self.pool.pools:
+            if pool.instance_id in self.failed:
+                continue
+            table, lengths = pool.block_table(rids)
+            if not lengths.any():
+                continue
+            covered += lengths
+            kdev, vdev, posdev = self._device_kv(pool)
+            paged_shape = (pool.n_attn, pool.n_pages, pool.page_size) + kdev.shape[2:]
+            shards.append(PagedShard(
+                k_pages=kdev.reshape(paged_shape),
+                v_pages=vdev.reshape(paged_shape),
+                table=jnp.asarray(table),
+                lengths=jnp.asarray(lengths),
+                # per-slot positions are only consumed by window masking
+                pos=(posdev.reshape(pool.n_pages, pool.page_size)
+                     if self.cfg.sliding_window else None),
+            ))
+        # cache holds tokens 0..seq_len-2; the processed token's KV is
+        # produced by this step and appended at the master afterwards
+        assert (covered == n_cached).all(), (covered, n_cached)
+        toks = jnp.asarray([r.output_tokens[-1] for r in g.requests], jnp.int32)
+        cache = Cache(length=jnp.asarray(n_cached))
+        prev_impl = self.model.attn_impl
+        self.model.attn_impl = self._paged_impl
+        self._paged_impl.begin_step(shards)
+        try:
+            logits, _, kvs = self.model.decode(self.params, toks, cache)
+        finally:
+            self._paged_impl.end_step()
+            self.model.attn_impl = prev_impl
+        logits = np.asarray(logits)
+        for b, r in enumerate(g.requests):
+            r.output_tokens.append(self._sample_token(logits[b]))
+            if kvs is not None:
+                # stash; _on_decode_done fills it once the slot is allocated
+                self._pending_kv[r.rid] = (
+                    np.asarray(kvs[0][:, b], np.float32),  # [L, 1, KVH, D]
+                    np.asarray(kvs[1][:, b], np.float32),
+                )
+
+    def _real_decode_serial(self, g: DecodeBatch) -> None:
+        """Per-request fallback (recurrent/hybrid state or custom impls)."""
         import jax.numpy as jnp
 
         from repro.models.transformer import Cache
@@ -497,6 +610,12 @@ class LoongServeEngine(BaseServingEngine):
                     np.asarray(kvs[0][:, 0], np.float32),  # [L, 1, KVH, D]
                     np.asarray(kvs[1][:, 0], np.float32),
                 )
+
+    def _apply_failure(self, inst: int) -> None:
+        super()._apply_failure(inst)
+        # drop the failed instance's device KV mirror (a full pool-sized
+        # copy) — it will be rebuilt from scratch if the instance rejoins
+        self._kv_mirror.pop(inst, None)
 
     def _drop_request_state(self, rids) -> None:
         for rid in rids:

@@ -9,6 +9,16 @@ the per-request valid length.
 
 Tiling: one q vector per (b, h) stays in VMEM; the KV shard streams in BK
 blocks over the sequential last grid dim with f32 accumulators in scratch.
+
+Sliding-window convention (shared across ALL kernels in this package, see
+striped_attention.py): a query at global position ``qp`` attends keys with
+``0 <= qp - kp < window``, self-inclusive.  Here the query sits at global
+position ``lengths`` — its own KV is NOT in the shard (it rides separately
+through the multi-master combine) — so the window test
+``kpos > cache_len - window`` is exactly ``qp - kpos < window``.  Together
+with the query's own token the attended set has ``window`` elements, matching
+the striped prefill kernel at the boundary
+(tests/test_kernels.py::test_window_convention_parity).
 """
 from __future__ import annotations
 

@@ -6,10 +6,19 @@ impl:
   * "pallas"     — the Pallas TPU kernel (compiled for TPU);
   * "interpret"  — the Pallas kernel body executed in interpret mode (CPU
                    validation of the TPU kernel).
+
+The default impl can be selected without code edits via the
+``REPRO_KERNEL_IMPL`` environment variable (benchmarks / CI), and overridden
+programmatically with `set_default_impl`.
+
+`dispatch_counts` tracks kernel/dispatch call volume per entry point so tests
+and benchmarks can assert launch-count invariants (e.g. one paged decode
+launch per instance per layer, independent of batch size).
 """
 from __future__ import annotations
 
-import functools
+import os
+from collections import Counter
 from typing import Optional
 
 import jax
@@ -17,15 +26,36 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_decode import flash_decode_partial as _fd_kernel
+from repro.kernels.paged_flash_decode import (
+    paged_flash_decode_partial as _pfd_kernel,
+)
 from repro.kernels.striped_attention import striped_flash_attention as _sa_kernel
 from repro.models.attention import Partial
 
-_DEFAULT_IMPL = "xla"
+_VALID_IMPLS = ("xla", "pallas", "interpret")
+
+
+def _impl_from_env() -> str:
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "xla")
+    if impl not in _VALID_IMPLS:
+        raise ValueError(
+            f"REPRO_KERNEL_IMPL={impl!r}: expected one of {_VALID_IMPLS}"
+        )
+    return impl
+
+
+_DEFAULT_IMPL = _impl_from_env()
+
+dispatch_counts: Counter = Counter()
+
+
+def reset_dispatch_counts() -> None:
+    dispatch_counts.clear()
 
 
 def set_default_impl(impl: str) -> None:
     global _DEFAULT_IMPL
-    assert impl in ("xla", "pallas", "interpret")
+    assert impl in _VALID_IMPLS
     _DEFAULT_IMPL = impl
 
 
@@ -38,6 +68,7 @@ def attention(
     impl: Optional[str] = None, block_q: int = 128, block_k: int = 128,
 ):
     impl = impl or _DEFAULT_IMPL
+    dispatch_counts["attention"] += 1
     if impl == "xla":
         return ref.striped_flash_attention_ref(
             q, k, v, q_pos, k_pos, causal=causal, window=window, softcap=softcap
@@ -53,7 +84,9 @@ def decode_partial(
     q, k, v, lengths, *, k_pos_offset=0, window=None, softcap=None,
     impl: Optional[str] = None, block_k: int = 128,
 ) -> Partial:
+    """Per-request decode over a dense KV shard (legacy gather-dense path)."""
     impl = impl or _DEFAULT_IMPL
+    dispatch_counts["decode_partial"] += 1
     if impl == "xla":
         return ref.flash_decode_partial_ref(
             q, k, v, lengths, k_pos_offset=k_pos_offset, window=window,
@@ -62,4 +95,25 @@ def decode_partial(
     return _fd_kernel(
         q, k, v, lengths, k_pos_offset=k_pos_offset, window=window,
         softcap=softcap, block_k=block_k, interpret=(impl == "interpret"),
+    )
+
+
+def paged_decode_partial(
+    q, k_pages, v_pages, block_table, lengths, page_pos=None, *,
+    query_pos=None, window=None, softcap=None, impl: Optional[str] = None,
+) -> Partial:
+    """Batched ragged decode over the paged pool: ONE launch for every
+    request of this instance (see kernels/paged_flash_decode.py)."""
+    impl = impl or _DEFAULT_IMPL
+    dispatch_counts["paged_decode_partial"] += 1
+    if impl == "xla":
+        return ref.paged_flash_decode_partial_ref(
+            q, k_pages, v_pages, block_table, lengths, page_pos,
+            query_pos=query_pos, window=window, softcap=softcap,
+        )
+    return _pfd_kernel(
+        q, k_pages, v_pages, jnp.asarray(block_table),
+        jnp.asarray(lengths), page_pos,
+        query_pos=query_pos, window=window, softcap=softcap,
+        interpret=(impl == "interpret"),
     )

@@ -25,6 +25,40 @@ def flash_decode_partial_ref(
     cl = jnp.asarray(lengths)
     valid = pos[None, :] < cl[:, None]
     if window is not None:
+        # repo window convention (see striped_attention.py): the query sits at
+        # global position `lengths` (its own KV is not in the shard), so
+        # qp - kp < window  <=>  kp > lengths - window
         valid &= pos[None, :] > (cl[:, None] - window)
+    mask = jnp.broadcast_to(valid[:, None, :], (b, q.shape[1], s))
+    return A.partial_attention(q, k, v, mask, softcap=softcap)
+
+
+def paged_flash_decode_partial_ref(
+    q,  # [B, 1, H, D]
+    k_pages,  # [n_pages, P, KVH, D]
+    v_pages,
+    block_table,  # [B, max_pages] int32
+    lengths,  # [B] int32 valid local tokens
+    page_pos=None,  # [n_pages, P] int32 global positions
+    *,
+    query_pos=None,  # [B] int32 (required with window)
+    window=None,
+    softcap=None,
+) -> A.Partial:
+    """XLA `take`-based oracle for the paged decode kernel (CPU parity)."""
+    bt = jnp.asarray(block_table, jnp.int32)
+    b, max_pages = bt.shape
+    page = k_pages.shape[1]
+    if max_pages == 0:
+        return A.empty_partial(b, q.shape[1], q.shape[2], q.shape[3])
+    s = max_pages * page
+    flat = bt.reshape(-1)
+    k = jnp.take(k_pages, flat, axis=0).reshape((b, s) + k_pages.shape[2:])
+    v = jnp.take(v_pages, flat, axis=0).reshape((b, s) + v_pages.shape[2:])
+    j = jnp.arange(s)
+    valid = j[None, :] < jnp.asarray(lengths)[:, None]
+    if window is not None:
+        kp = jnp.take(jnp.asarray(page_pos), flat, axis=0).reshape(b, s)
+        valid &= (jnp.asarray(query_pos)[:, None] - kp) < window
     mask = jnp.broadcast_to(valid[:, None, :], (b, q.shape[1], s))
     return A.partial_attention(q, k, v, mask, softcap=softcap)

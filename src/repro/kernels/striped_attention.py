@@ -14,6 +14,15 @@ SM-occupancy/shared-memory tuning with BlockSpec VMEM tiling):
     index map (kv_head = q_head // q_per_kv) so KV blocks are fetched once
     per q-head group, not expanded in HBM.
 
+Sliding-window convention (shared across ALL kernels in this package): a
+query at global position ``qp`` attends keys at ``kp`` iff
+``0 <= qp - kp < window`` — self-inclusive, so the attended set has exactly
+``window`` elements.  This kernel applies it literally; the decode kernels
+(flash_decode.py, paged_flash_decode.py) express the same predicate in terms
+of the cache length because the query's own KV is not part of the shard.
+Cross-kernel parity at the window boundary is pinned by
+tests/test_kernels.py::test_window_convention_parity.
+
 Validated in interpret mode against kernels/ref.py on CPU; targets TPU.
 """
 from __future__ import annotations

@@ -36,10 +36,12 @@ class PlacementPlan:
 
 class DistributedKVPool:
     def __init__(self, cfg: ModelConfig, n_instances: int,
-                 capacity_per_instance: int, store_values: bool = True):
+                 capacity_per_instance: int, store_values: bool = True,
+                 page_size: int = 1):
         self.cfg = cfg
+        self.page_size = page_size
         self.pools: List[KVPool] = [
-            KVPool(cfg, capacity_per_instance, i, store_values)
+            KVPool(cfg, capacity_per_instance, i, store_values, page_size)
             for i in range(n_instances)
         ]
         self.migrated_bytes = 0  # reactive-migration traffic (baselines)

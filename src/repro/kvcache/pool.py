@@ -1,16 +1,31 @@
-"""Token-granularity paged KV pool for one elastic instance.
+"""Token-granularity KV pool backed by page-aligned storage.
 
 LoongServe manages KV "at the granularity of a single token across instances
-without any locality constraints" (§1, §4). Page size == 1 token: a slot holds
-the KV vectors of one token across all attention applications of the model.
+without any locality constraints" (§1, §4).  Logically nothing changed: a
+request's tokens may land on any subset of instances.  Physically, each
+instance now backs its slots with fixed-size *pages* so the decode kernel can
+attend in place over the pool storage through a per-request block table —
+no dense per-request gather on the hot path.
 
-Storage is host-side numpy (the management plane); the engine gathers dense
-per-request views to feed jitted compute. `bytes_per_slot` reflects the real
-bf16 KV footprint so pool capacities model HBM honestly.
+Layout invariant: a request's local tokens are packed densely, in append
+order, into pages it owns exclusively.  Local index ``j`` lives in page
+``pages[j // P]`` at offset ``j % P`` (slot id ``pages[j // P] * P + j % P``).
+``page_size=1`` (the default) degenerates to exact token-granular accounting —
+every token is its own page, so there is zero internal fragmentation and the
+legacy OutOfSlots semantics hold bit-for-bit.  Larger pages trade a bounded
+tail-page slack for kernel-friendly contiguity; ``free_slots`` then reports
+whole free pages only (conservative), while a request can always extend into
+its own tail slack.
+
+All bookkeeping is vectorized numpy (free page stack, per-request page/pos
+arrays) — no per-token dicts anywhere on the hot path.  Storage is host-side
+numpy (the management plane); the engine keeps an incrementally-updated device
+mirror fed by `consume_dirty()`.  `bytes_per_slot` reflects the real bf16 KV
+footprint so pool capacities model HBM honestly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -30,84 +45,240 @@ class TokenRef:
     slot: int
 
 
+class _ReqState:
+    """Per-request paged bookkeeping: owned pages + global positions, both
+    as amortized-growth numpy arrays indexed by local token order."""
+
+    __slots__ = ("pages", "n_pages", "pos", "n_tok", "max_pos")
+
+    def __init__(self):
+        self.pages = np.empty(4, np.int32)
+        self.n_pages = 0
+        self.pos = np.empty(8, np.int64)
+        self.n_tok = 0
+        self.max_pos = -1  # O(1) is-new check for the append hot path
+
+    def _grow(self, arr: np.ndarray, need: int) -> np.ndarray:
+        if need <= len(arr):
+            return arr
+        new = np.empty(max(need, 2 * len(arr)), arr.dtype)
+        new[: len(arr)] = arr
+        return new
+
+    def append_pages(self, new_pages: np.ndarray) -> None:
+        self.pages = self._grow(self.pages, self.n_pages + len(new_pages))
+        self.pages[self.n_pages : self.n_pages + len(new_pages)] = new_pages
+        self.n_pages += len(new_pages)
+
+    def append_pos(self, positions: np.ndarray) -> None:
+        self.pos = self._grow(self.pos, self.n_tok + len(positions))
+        self.pos[self.n_tok : self.n_tok + len(positions)] = positions
+        self.n_tok += len(positions)
+        if len(positions):
+            self.max_pos = max(self.max_pos, int(positions.max()))
+
+
 class KVPool:
-    """Per-instance pool. Slots are single tokens."""
+    """Per-instance pool: token-granular slots on page-aligned storage."""
 
     def __init__(self, cfg: ModelConfig, capacity: int, instance_id: int = 0,
-                 store_values: bool = True):
+                 store_values: bool = True, page_size: int = 1):
+        assert page_size >= 1 and capacity % page_size == 0, (
+            capacity, page_size
+        )
         self.cfg = cfg
         self.capacity = int(capacity)
         self.instance_id = instance_id
         self.store_values = store_values
+        self.page_size = int(page_size)
+        self.n_pages = self.capacity // self.page_size
         n_attn = max(cfg.n_attention_applications, 1)
-        self._free: List[int] = list(range(self.capacity - 1, -1, -1))
-        # request_id -> {global_pos: slot}
-        self._slots: Dict[int, Dict[int, int]] = {}
+        self.n_attn = n_attn
+        # free page stack: pop from the end
+        self._free_pages = np.arange(self.n_pages - 1, -1, -1, dtype=np.int32)
+        self._n_free_pages = self.n_pages
+        self._reqs: Dict[int, _ReqState] = {}
+        self._used_tokens = 0
+        # global position of the token stored in each slot (-1 = unoccupied)
+        self.slot_pos = np.full(self.capacity, -1, np.int32)
         if store_values:
             shape = (n_attn, self.capacity, cfg.n_kv_heads, cfg.head_dim)
             self.k = np.zeros(shape, np.float32)
             self.v = np.zeros(shape, np.float32)
+        # device-mirror dirty tracking (engine-side incremental sync)
+        self._dirty_full = True
+        self._dirty: List[np.ndarray] = []
+        self._dirty_count = 0
 
     # ------------------------------------------------------------- accounting
     @property
     def used(self) -> int:
-        return self.capacity - len(self._free)
+        """Allocated *tokens* (not pages)."""
+        return self._used_tokens
 
     @property
     def free_slots(self) -> int:
-        return len(self._free)
+        """Tokens guaranteed allocatable by ANY request: whole free pages.
+        (A request holding a partially-filled tail page can additionally
+        extend into its own slack.)  Exact for page_size=1."""
+        return self._n_free_pages * self.page_size
 
     @property
     def bytes_per_slot(self) -> int:
         return max(self.cfg.kv_bytes_per_token, 1)
 
     def requests(self) -> List[int]:
-        return list(self._slots)
+        return list(self._reqs)
+
+    def slots_of(self, request_id: int) -> np.ndarray:
+        """Slot ids in local (append) order — vectorized."""
+        st = self._reqs.get(request_id)
+        if st is None:
+            return np.empty(0, np.int64)
+        return self.slots_of_state(st)
 
     def tokens_of(self, request_id: int) -> Dict[int, int]:
-        return dict(self._slots.get(request_id, {}))
+        """Legacy mapping {global_pos: slot} (planning / tests)."""
+        st = self._reqs.get(request_id)
+        if st is None:
+            return {}
+        return dict(zip(st.pos[: st.n_tok].tolist(),
+                        self.slots_of(request_id).tolist()))
 
     # ------------------------------------------------------------- alloc/free
+    def _pop_pages(self, n: int) -> np.ndarray:
+        pages = self._free_pages[self._n_free_pages - n : self._n_free_pages]
+        self._n_free_pages -= n
+        return pages.copy()
+
+    def _push_pages(self, pages: np.ndarray) -> None:
+        n = len(pages)
+        self._free_pages[self._n_free_pages : self._n_free_pages + n] = pages
+        self._n_free_pages += n
+
     def alloc(self, request_id: int, positions: Sequence[int]) -> List[int]:
-        if len(positions) > len(self._free):
+        pos = np.asarray(positions, np.int64)
+        n = len(pos)
+        st = self._reqs.get(request_id)
+        slack = (st.n_pages * self.page_size - st.n_tok) if st else 0
+        need_pages = max(0, -(-(n - slack) // self.page_size)) if n > slack else 0
+        if need_pages > self._n_free_pages:
             raise OutOfSlots(
-                f"instance {self.instance_id}: need {len(positions)}, "
-                f"free {len(self._free)}"
+                f"instance {self.instance_id}: need {n} tokens "
+                f"({need_pages} pages), free {self.free_slots} tokens "
+                f"({self._n_free_pages} pages)"
             )
-        slots = [self._free.pop() for _ in positions]
-        mp = self._slots.setdefault(request_id, {})
-        for pos, slot in zip(positions, slots):
-            assert pos not in mp, (request_id, pos)
-            mp[pos] = slot
-        return slots
+        if st is None:
+            st = self._reqs[request_id] = _ReqState()
+        # duplicate guard: the decode hot path (single append past max_pos)
+        # is O(1); the full scans only run for bulk/out-of-order allocs
+        if n > 1:
+            assert len(np.unique(pos)) == n, (request_id, positions)
+        if n and st.n_tok and not (n == 1 and int(pos[0]) > st.max_pos):
+            assert not np.isin(pos, st.pos[: st.n_tok]).any(), (
+                request_id, positions
+            )
+        if need_pages:
+            st.append_pages(self._pop_pages(need_pages))
+        start = st.n_tok
+        st.append_pos(pos)
+        self._used_tokens += n
+        slots = self._local_slots(st, start, n)
+        self.slot_pos[slots] = pos
+        return slots.tolist()
+
+    def _local_slots(self, st: _ReqState, start: int, n: int) -> np.ndarray:
+        """Slot ids for local indices [start, start+n)."""
+        if n == 0:
+            return np.empty(0, np.int64)
+        j = np.arange(start, start + n)
+        return st.pages[j // self.page_size].astype(np.int64) * self.page_size \
+            + j % self.page_size
 
     def free_request(self, request_id: int) -> int:
-        mp = self._slots.pop(request_id, {})
-        self._free.extend(mp.values())
-        return len(mp)
+        st = self._reqs.pop(request_id, None)
+        if st is None:
+            return 0
+        self.slot_pos[self.slots_of_state(st)] = -1
+        self._push_pages(st.pages[: st.n_pages])
+        self._used_tokens -= st.n_tok
+        return st.n_tok
+
+    def slots_of_state(self, st: _ReqState) -> np.ndarray:
+        return self._local_slots(st, 0, st.n_tok)
 
     def free_positions(self, request_id: int, positions: Sequence[int]) -> int:
-        """Free specific token positions (SWA window eviction)."""
-        mp = self._slots.get(request_id, {})
-        n = 0
-        for pos in positions:
-            slot = mp.pop(pos, None)
-            if slot is not None:
-                self._free.append(slot)
-                n += 1
-        if not mp:
-            self._slots.pop(request_id, None)
-        return n
+        """Free specific token positions (SWA window eviction).  The request's
+        surviving tokens are compacted so the packed-page layout invariant is
+        preserved; emptied tail pages return to the free stack."""
+        st = self._reqs.get(request_id)
+        if st is None:
+            return 0
+        drop = np.isin(st.pos[: st.n_tok], np.asarray(positions, np.int64))
+        n_drop = int(drop.sum())
+        if n_drop == 0:
+            return 0
+        old_slots = self.slots_of_state(st)
+        keep_slots = old_slots[~drop]
+        keep_pos = st.pos[: st.n_tok][~drop]
+        n_keep = st.n_tok - n_drop
+        if n_keep == 0:
+            self.free_request(request_id)
+            return n_drop
+        self.slot_pos[old_slots] = -1
+        st.n_tok = 0  # rebuild the packed prefix
+        st.pos[:n_keep] = keep_pos
+        st.n_tok = n_keep
+        st.max_pos = int(keep_pos.max())
+        new_slots = self._local_slots(st, 0, n_keep)
+        moved = new_slots != keep_slots
+        if self.store_values and moved.any():
+            # fancy-index gather materializes the RHS first, so overlapping
+            # src/dst ranges are safe
+            self.k[:, new_slots[moved]] = self.k[:, keep_slots[moved]]
+            self.v[:, new_slots[moved]] = self.v[:, keep_slots[moved]]
+            self._mark_dirty(new_slots[moved])
+        self.slot_pos[new_slots] = keep_pos
+        n_pages_keep = -(-n_keep // self.page_size)
+        if n_pages_keep < st.n_pages:
+            self._push_pages(st.pages[n_pages_keep: st.n_pages])
+            st.n_pages = n_pages_keep
+        self._used_tokens -= n_drop
+        return n_drop
 
     # ------------------------------------------------------------------ data
+    def _mark_dirty(self, slots: np.ndarray) -> None:
+        if self._dirty_full or len(slots) == 0:
+            return
+        self._dirty.append(np.asarray(slots, np.int64))
+        self._dirty_count += len(slots)
+        if self._dirty_count > self.capacity // 4:
+            self._dirty_full = True
+            self._dirty.clear()
+            self._dirty_count = 0
+
+    def consume_dirty(self) -> Tuple[bool, np.ndarray]:
+        """(full_resync_needed, dirty slot ids) since the last call; resets.
+        The engine's device mirror applies these incrementally instead of
+        re-uploading the pool every iteration."""
+        full, dirty = self._dirty_full, self._dirty
+        self._dirty_full = False
+        self._dirty = []
+        self._dirty_count = 0
+        if full:
+            return True, np.empty(0, np.int64)
+        if not dirty:
+            return False, np.empty(0, np.int64)
+        return False, np.unique(np.concatenate(dirty))
+
     def write(self, request_id: int, positions: Sequence[int],
               k: np.ndarray, v: np.ndarray) -> None:
         """k/v: [n_attn, n_tokens, KVH, D] for `positions` (allocates)."""
-        slots = self.alloc(request_id, positions)
+        slots = np.asarray(self.alloc(request_id, positions), np.int64)
         if self.store_values:
-            idx = np.asarray(slots)
-            self.k[:, idx] = np.asarray(k, np.float32)
-            self.v[:, idx] = np.asarray(v, np.float32)
+            self.k[:, slots] = np.asarray(k, np.float32)
+            self.v[:, slots] = np.asarray(v, np.float32)
+            self._mark_dirty(slots)
 
     def fill(self, request_id: int, positions: Sequence[int],
              k: np.ndarray, v: np.ndarray) -> None:
@@ -115,24 +286,102 @@ class KVPool:
         the scheduler reserves placement, the prefill ring fills it)."""
         if not self.store_values:
             return
-        mp = self._slots[request_id]
-        idx = np.array([mp[p] for p in positions], np.int64)
-        if len(idx):
-            self.k[:, idx] = np.asarray(k, np.float32)
-            self.v[:, idx] = np.asarray(v, np.float32)
+        st = self._reqs[request_id]
+        pos = np.asarray(positions, np.int64)
+        if len(pos) == 0:
+            return
+        cur = st.pos[: st.n_tok]
+        sorter = np.argsort(cur, kind="stable")
+        # clip so an unknown position reaches the diagnostic assert below
+        # instead of an opaque IndexError
+        ss = np.minimum(np.searchsorted(cur, pos, sorter=sorter), st.n_tok - 1)
+        li = sorter[ss]
+        assert (cur[li] == pos).all(), (request_id, positions)
+        slots = self.slots_of_state(st)[li]
+        self.k[:, slots] = np.asarray(k, np.float32)
+        self.v[:, slots] = np.asarray(v, np.float32)
+        self._mark_dirty(slots)
 
     def gather(self, request_id: int) -> Tuple[np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
-        """Returns (positions sorted, k, v) for this instance's share."""
-        mp = self._slots.get(request_id, {})
-        positions = np.array(sorted(mp), np.int64)
+        """Returns (positions sorted, k, v) for this instance's share.
+        Off the hot path now (migration / debugging / legacy baselines);
+        decode reads the pool in place via `block_table`."""
+        st = self._reqs.get(request_id)
+        if st is None:
+            pos = np.empty(0, np.int64)
+        else:
+            pos = st.pos[: st.n_tok]
+        order = np.argsort(pos, kind="stable")
+        positions = pos[order]
         if not self.store_values:
             return positions, None, None
-        idx = np.array([mp[p] for p in positions], np.int64)
-        if len(idx) == 0:
-            n_attn = self.k.shape[0]
-            empty = np.zeros((n_attn, 0) + self.k.shape[2:], np.float32)
+        if len(positions) == 0:
+            empty = np.zeros((self.n_attn, 0) + self.k.shape[2:], np.float32)
             return positions, empty, empty.copy()
-        return positions, self.k[:, idx], self.v[:, idx]
+        slots = self.slots_of_state(st)[order]
+        return positions, self.k[:, slots], self.v[:, slots]
+
+    # ------------------------------------------------------------ paged views
+    def block_table(self, request_ids: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-request page tables over THIS pool's storage.
+
+        Returns (table [B, max_pages] int32 — padded with page 0 — and
+        lengths [B] int32 — the number of local valid tokens per request).
+        Requests with no tokens here get length 0.  Feeding this straight to
+        the paged decode kernel is the gather-free hot path.
+        """
+        states = [self._reqs.get(rid) for rid in request_ids]
+        lengths = np.array([st.n_tok if st else 0 for st in states], np.int32)
+        max_pages = max((st.n_pages for st in states if st), default=0)
+        table = np.zeros((len(states), max_pages), np.int32)
+        for b, st in enumerate(states):
+            if st:
+                table[b, : st.n_pages] = st.pages[: st.n_pages]
+        return table, lengths
+
+    @property
+    def k_pages(self) -> np.ndarray:
+        """[n_attn, n_pages, page_size, KVH, D] view of the K storage."""
+        return self.k.reshape(self.n_attn, self.n_pages, self.page_size,
+                              *self.k.shape[2:])
+
+    @property
+    def v_pages(self) -> np.ndarray:
+        return self.v.reshape(self.n_attn, self.n_pages, self.page_size,
+                              *self.v.shape[2:])
+
+    @property
+    def pos_pages(self) -> np.ndarray:
+        """[n_pages, page_size] global position per slot (-1 = unoccupied)."""
+        return self.slot_pos.reshape(self.n_pages, self.page_size)
+
+    # ------------------------------------------------------- checkpointing
+    def state_dict(self) -> Dict[str, object]:
+        return {
+            "free_pages": self._free_pages.copy(),
+            "n_free_pages": self._n_free_pages,
+            "used_tokens": self._used_tokens,
+            "slot_pos": self.slot_pos.copy(),
+            "reqs": {
+                rid: (st.pages[: st.n_pages].copy(), st.pos[: st.n_tok].copy())
+                for rid, st in self._reqs.items()
+            },
+        }
+
+    def load_state_dict(self, state: Dict[str, object]) -> None:
+        self._free_pages = state["free_pages"].copy()
+        self._n_free_pages = state["n_free_pages"]
+        self._used_tokens = state["used_tokens"]
+        self.slot_pos = state["slot_pos"].copy()
+        self._reqs = {}
+        for rid, (pages, pos) in state["reqs"].items():
+            st = _ReqState()
+            st.append_pages(np.asarray(pages, np.int32))
+            st.append_pos(np.asarray(pos, np.int64))
+            self._reqs[rid] = st
+        self._dirty_full = True
+        self._dirty = []
+        self._dirty_count = 0
 
     def evict(self, request_id: int) -> int:
         """Evict a request entirely (recompute later). Returns freed tokens."""

@@ -35,6 +35,16 @@ class Partial(NamedTuple):
     l: jnp.ndarray  # [B, Sq, H] f32 sum of exp(s - m)
 
 
+def empty_partial(b: int, sq: int, h: int, d: int) -> Partial:
+    """Partial over an empty KV shard: a no-op under merge_partial
+    (m=-inf carries zero weight)."""
+    return Partial(
+        o=jnp.zeros((b, sq, h, d), jnp.float32),
+        m=jnp.full((b, sq, h), -jnp.inf, jnp.float32),
+        l=jnp.zeros((b, sq, h), jnp.float32),
+    )
+
+
 def gqa_expand(kv: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
     """[B, S, KVH, D] -> [B, S, KVH*q_per_kv, D] by repetition."""
     if q_per_kv == 1:

@@ -315,12 +315,19 @@ class Model:
             # buffers per-layer-sized (a while-loop lets XLA hoist whole-cache
             # copies/conversions out of the loop — HBM blowup), and the tiny
             # decode body keeps the unrolled HLO small.
-            n_layers = k_caches.shape[0]
+            # k_caches may be None: a paged attn_impl (core.paged_decode)
+            # reads KV from the pool storage itself, layer by layer.
+            if k_caches is None:
+                n_layers = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+            else:
+                n_layers = k_caches.shape[0]
             carry = (x, naux)
             kv_list = []
             for li in range(n_layers):
                 lp = jax.tree.map(lambda a: a[li], params["layers"])
-                carry, kv = body(carry, lp, k_caches[li], v_caches[li])
+                kc = k_caches[li] if k_caches is not None else None
+                vc = v_caches[li] if v_caches is not None else None
+                carry, kv = body(carry, lp, kc, vc)
                 kv_list.append(kv)
             x, aux = carry
             kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)

@@ -1,0 +1,41 @@
+"""Optional-hypothesis shim.
+
+`hypothesis` is an *optional* dev dependency (declared in
+requirements-dev.txt).  Importing `given/settings/strategies` from here keeps
+a module's plain tests collectible when it is absent: property tests are
+skipped with a clear reason instead of failing the whole collection.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction; never executed (tests skip)."""
+
+        def __getattr__(self, _name):
+            def _stub(*args, **kwargs):
+                return _StrategyStub()
+
+            return _stub
+
+        def map(self, _fn):
+            return self
+
+    strategies = _StrategyStub()

@@ -1,8 +1,15 @@
-"""Property-based tests (hypothesis) on the system's core invariants."""
+"""Property-based tests (hypothesis) on the system's core invariants.
+
+`hypothesis` is an optional dev dependency (requirements-dev.txt); every test
+here is property-based, so the whole module skips when it is missing.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as stst
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as stst  # noqa: E402
 
 from repro.core import striped as st
 from repro.models import attention as A

@@ -101,6 +101,37 @@ def test_flash_decode_kernel_sweep(dtype, b, s, h, kvh, d, bk, off, win):
                                rtol=2e-2, atol=1e-4)
 
 
+@pytest.mark.parametrize("window", [1, 2, 32, 64])
+def test_window_convention_parity(window):
+    """Cross-kernel sliding-window convention at the boundary: a query at
+    global position qp attends keys with 0 <= qp - kp < window (self
+    inclusive).  The prefill kernel applies it literally; the decode kernel
+    sees the cache WITHOUT the query's own KV (query position == lengths) and
+    merges the own-token partial — both must select the identical window."""
+    from repro.models import attention as A
+
+    b, s, h, kvh, d = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (b, s, h, d), jnp.float32)
+    k = _rand(ks[1], (b, s, kvh, d), jnp.float32)
+    v = _rand(ks[2], (b, s, kvh, d), jnp.float32)
+    pos = jnp.arange(s)
+    # prefill convention: last row of the striped kernel output
+    full = ops.attention(q, k, v, pos, pos, causal=True, window=window,
+                         impl="interpret", block_q=32, block_k=32)
+    last_prefill = np.asarray(full)[:, -1]
+    # decode convention: cache = tokens 0..s-2, query's own KV merged apart
+    qd = q[:, s - 1 : s]
+    lens = jnp.full((b,), s - 1, jnp.int32)
+    p_hist = ops.decode_partial(qd, k[:, : s - 1], v[:, : s - 1], lens,
+                                window=window, impl="interpret", block_k=21)
+    p_own = A.partial_attention(qd, k[:, s - 1 :], v[:, s - 1 :], None)
+    last_decode = np.asarray(
+        A.finalize_partial(A.merge_partial(p_hist, p_own))
+    )[:, 0]
+    np.testing.assert_allclose(last_decode, last_prefill, atol=2e-5)
+
+
 def test_decode_partials_compose_to_full():
     """Sharded decode partials (kernel) merged across shards == full attn."""
     from repro.models import attention as A

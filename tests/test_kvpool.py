@@ -2,7 +2,7 @@
 placement properties (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as stst
+from hypothesis_compat import given, settings, strategies as stst
 
 from repro.configs import REGISTRY, reduced
 from repro.kvcache import DistributedKVPool, KVPool, OutOfSlots

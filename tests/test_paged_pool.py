@@ -1,0 +1,158 @@
+"""Paged pool internals: page accounting under fragmentation, block_table
+correctness (incl. after SWA eviction), OutOfSlots at exact-capacity
+boundaries, checkpoint state round-trip."""
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced
+from repro.kvcache import DistributedKVPool, KVPool, OutOfSlots
+
+CFG = reduced(REGISTRY["lwm-7b"])
+
+
+def _decode_table(pool, rid):
+    """Reconstruct a request's (positions, k, v) through block_table — the
+    exact addressing contract the paged kernel uses."""
+    table, lengths = pool.block_table([rid])
+    n = int(lengths[0])
+    P = pool.page_size
+    slots = (table[0].astype(np.int64)[:, None] * P + np.arange(P)).reshape(-1)[:n]
+    return pool.slot_pos[slots], pool.k[:, slots], pool.v[:, slots]
+
+
+def test_paged_alloc_free_fragmentation_interleaved():
+    """Interleaved alloc/free of many requests must never leak or double-book
+    pages, and surviving requests' data must stay addressable via the block
+    table."""
+    P = 4
+    pool = KVPool(CFG, 40 * P, store_values=True, page_size=P)
+    rng = np.random.default_rng(0)
+    n_attn = pool.n_attn
+    live = {}  # rid -> (positions, k)
+    next_rid = 0
+    for step in range(200):
+        if live and (rng.random() < 0.4 or pool.free_slots < 8 * P):
+            rid = rng.choice(list(live))
+            pos, _ = live.pop(rid)
+            assert pool.free_request(rid) == len(pos)
+        else:
+            n = int(rng.integers(1, 11))
+            if n > pool.free_slots:
+                continue
+            rid = next_rid
+            next_rid += 1
+            pos = list(range(n))
+            k = rng.normal(size=(n_attn, n, CFG.n_kv_heads, CFG.head_dim))
+            pool.write(rid, pos, k, k + 1)
+            live[rid] = (pos, k.astype(np.float32))
+    # accounting invariants
+    assert pool.used == sum(len(p) for p, _ in live.values())
+    owned = np.concatenate(
+        [pool._reqs[rid].pages[: pool._reqs[rid].n_pages] for rid in live]
+    ) if live else np.empty(0, np.int32)
+    free = pool._free_pages[: pool._n_free_pages]
+    both = np.concatenate([owned, free])
+    assert len(np.unique(both)) == len(both) == pool.n_pages  # no leak/dup
+    # data still addressable through the block table
+    for rid, (pos, k) in live.items():
+        tpos, kk, vv = _decode_table(pool, rid)
+        np.testing.assert_array_equal(np.sort(tpos), pos)
+        order = np.argsort(tpos, kind="stable")
+        np.testing.assert_allclose(kk[:, order], k, atol=1e-6)
+        np.testing.assert_allclose(vv[:, order], k + 1, atol=1e-6)
+
+
+def test_block_table_after_free_positions_swa_eviction():
+    """SWA eviction (free_positions) compacts the packed-page layout: the
+    block table must keep addressing exactly the surviving tokens."""
+    P = 4
+    pool = KVPool(CFG, 8 * P, store_values=True, page_size=P)
+    n = 14
+    k = np.arange(n, dtype=np.float32)[None, :, None, None] * np.ones(
+        (pool.n_attn, n, CFG.n_kv_heads, CFG.head_dim), np.float32
+    )
+    pool.write(1, list(range(n)), k, 10 * k)
+    freed = pool.free_positions(1, [0, 1, 2, 3, 5])  # prefix + a hole
+    assert freed == 5
+    keep = [4] + list(range(6, n))
+    tpos, kk, vv = _decode_table(pool, 1)
+    np.testing.assert_array_equal(np.sort(tpos), keep)
+    order = np.argsort(tpos, kind="stable")
+    np.testing.assert_allclose(kk[0, order, 0, 0], keep)
+    np.testing.assert_allclose(vv[0, order, 0, 0], [10 * p for p in keep])
+    # 10 survivors -> 3 pages; 5 pages free again
+    assert pool._reqs[1].n_pages == 3
+    assert pool.free_slots == 5 * P
+    # gather (migration path) agrees with the table view
+    gpos, gk, _ = pool.gather(1)
+    np.testing.assert_array_equal(gpos, keep)
+    np.testing.assert_allclose(gk[0, :, 0, 0], keep)
+    # evicting everything else returns the request's remaining pages
+    assert pool.free_positions(1, keep) == len(keep)
+    assert pool.used == 0 and pool.free_slots == 8 * P
+    assert pool.block_table([1])[1][0] == 0
+
+
+def test_out_of_slots_exact_capacity_boundaries():
+    P = 4
+    pool = KVPool(CFG, 3 * P, store_values=False, page_size=P)
+    # fill to the exact page boundary
+    pool.alloc(1, list(range(P)))
+    pool.alloc(2, list(range(2 * P)))
+    assert pool.free_slots == 0 and pool.used == 3 * P
+    with pytest.raises(OutOfSlots):
+        pool.alloc(3, [0])  # no free page, no slack anywhere
+    # one token short of the boundary: tail slack belongs to request 2 only
+    pool.free_request(2)
+    pool.alloc(2, list(range(2 * P - 1)))
+    assert pool.free_slots == 0  # conservative: no whole free page
+    with pytest.raises(OutOfSlots):
+        pool.alloc(3, [0])  # other requests cannot use 2's slack
+    pool.alloc(2, [2 * P - 1])  # 2 itself can extend into its slack
+    assert pool.used == 3 * P
+    with pytest.raises(OutOfSlots):
+        pool.alloc(2, [2 * P])  # now truly full, even for 2
+    # freeing releases whole pages again
+    assert pool.free_request(1) == P
+    assert pool.free_slots == P
+    pool.alloc(3, list(range(P)))
+
+
+def test_page_size_one_token_exact_semantics():
+    """page_size=1 keeps the legacy token-granular accounting bit-for-bit:
+    free tokens are always allocatable regardless of fragmentation."""
+    pool = KVPool(CFG, 8, store_values=False)  # default page_size=1
+    pool.alloc(1, [0, 1, 2])
+    pool.alloc(2, [0, 1])
+    pool.free_positions(1, [1])  # a hole
+    assert pool.free_slots == 4
+    pool.alloc(3, list(range(4)))  # exactly the free tokens
+    assert pool.used == 8
+    with pytest.raises(OutOfSlots):
+        pool.alloc(4, [0])
+
+
+def test_state_dict_roundtrip_preserves_tables():
+    P = 2
+    pool = KVPool(CFG, 6 * P, store_values=False, page_size=P)
+    pool.alloc(7, list(range(5)))
+    pool.alloc(8, list(range(100, 103)))
+    pool.free_positions(7, [0])
+    state = pool.state_dict()
+    t_before = pool.block_table([7, 8])
+    pool2 = KVPool(CFG, 6 * P, store_values=False, page_size=P)
+    pool2.load_state_dict(state)
+    t_after = pool2.block_table([7, 8])
+    np.testing.assert_array_equal(t_before[0], t_after[0])
+    np.testing.assert_array_equal(t_before[1], t_after[1])
+    assert pool2.used == pool.used and pool2.free_slots == pool.free_slots
+    np.testing.assert_array_equal(pool2.slot_pos, pool.slot_pos)
+
+
+def test_distributed_pool_page_size_plumbs_through():
+    dp = DistributedKVPool(CFG, 3, 32, store_values=False, page_size=4)
+    assert all(p.page_size == 4 for p in dp.pools)
+    plan = dp.plan_placement(1, list(range(20)), [0, 1, 2])
+    dp.place(plan)
+    tables = [p.block_table([1]) for p in dp.pools]
+    assert sum(int(l[0]) for _, l in tables) == 20

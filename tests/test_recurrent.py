@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as stst
+from hypothesis_compat import given, settings, strategies as stst
 
 from repro.configs import REGISTRY, reduced
 from repro.models import ssm, xlstm

@@ -2,7 +2,7 @@
 dispatch/allocation/scaling behaviors."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as stst
+from hypothesis_compat import given, settings, strategies as stst
 
 from repro.configs import REGISTRY
 from repro.engine.request import Request
