@@ -415,6 +415,146 @@ def bench_decode_paged(quick: bool = False):
     )
 
 
+# ------------------------------------------------------ packed prefill step
+
+
+def bench_prefill_packed(quick: bool = False):
+    """Prefill benchmark on the REAL engine hot path: per-request serial
+    prefill (one eager model.prefill per request — a fresh program per
+    distinct prompt length, host-side pool.fill) vs packed ragged prefill
+    (ONE jitted packed step per batch, segment-masked ragged attention,
+    direct-to-pool paged KV write-through).  Same model, same pools, same
+    PrefillBatch with reserved striped placement.  Writes
+    BENCH_prefill.json."""
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.configs import REGISTRY, reduced
+    from repro.engine.request import Phase, Request
+    from repro.engine.server import LoongServeEngine
+    from repro.kernels import ops
+    from repro.manager.scheduler import PrefillBatch
+    from repro.models import build_model
+
+    cfg = reduced(REGISTRY["lwm-7b"])
+    page = 64
+    b = 8 if quick else 16
+    iters = 2 if quick else 5
+    n_inst = 2
+    rng = np.random.default_rng(0)
+    lo, hi = (32, 128) if quick else (64, 512)
+    lengths = rng.integers(lo, hi + 1, b)
+    lengths[0], lengths[-1] = lo, hi  # span >= 4x guaranteed
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    capacity = (-(-int(lengths.sum()) // page) + 16) * page  # per instance
+    eng = LoongServeEngine(cfg, n_inst, capacity, store_values=True,
+                           model=model, params=params, page_size=page)
+    # reserve striped token-granular placement across the instances, exactly
+    # as the scheduler's proactive scale-down does before prefill executes
+    reqs, placement = [], {}
+    for rid, ln in enumerate(lengths):
+        n = int(ln)
+        r = Request(input_len=n, max_new_tokens=8,
+                    prompt=rng.integers(0, cfg.vocab_size, n).tolist())
+        r.rid, r.phase = rid, Phase.PREFILL
+        plan = eng.pool.plan_placement(rid, list(range(n)), range(n_inst))
+        eng.pool.place(plan)  # reserve slots; prefill fills the values
+        placement[rid] = plan.assignment
+        reqs.append(r)
+    batch = PrefillBatch(reqs, list(range(n_inst)),
+                         scale_down_to=list(range(n_inst)),
+                         placement=placement)
+    impl = ops.get_default_impl()
+
+    def reset():
+        for r in reqs:
+            r.output_tokens = []
+
+    def run_arm(step):
+        reset()
+        step(batch)  # warmup / compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            reset()
+            step(batch)
+        return (time.perf_counter() - t0) / iters
+
+    t_serial = run_arm(eng._real_prefill_serial)
+    t_packed = run_arm(eng._real_prefill_packed)
+
+    # launch-count instrumentation: the jitted packed step fuses its
+    # launches, so count the dataflow once in eager (disable_jit) mode —
+    # exactly one prefill_packed dispatch per layer per batch
+    ops.reset_dispatch_counts()
+    with jax.disable_jit():
+        reset()
+        eng._real_prefill_packed(batch)
+    packed_dispatches = dict(ops.dispatch_counts)
+
+    # write-through invariant: after a packed prefill no slot is dirty, so
+    # the first decode's mirror sync would upload zero prefill slots
+    post_dirty = sum(p.dirty_slot_count() for p in eng.pool.pools)
+
+    # bucketing: sweep random batch shapes up to max_tokens and count the
+    # distinct compiled packed-prefill programs — O(log max_tokens), not one
+    # per prompt length
+    max_tokens = int(lengths.sum())
+    n_sweep = 3 if quick else 12
+    for s in range(n_sweep):
+        ls = rng.integers(lo, hi + 1, int(rng.integers(2, b + 1)))
+        sreqs = []
+        for j, ln in enumerate(ls):
+            r = Request(input_len=int(ln), max_new_tokens=8,
+                        prompt=rng.integers(0, cfg.vocab_size, int(ln)).tolist())
+            r.rid = 10_000 + s * 100 + j
+            sreqs.append(r)
+        # no placement -> the KV scatter is skipped; only the model step runs
+        eng._real_prefill_packed(
+            PrefillBatch(sreqs, list(range(n_inst)), scale_down_to=[])
+        )
+    n_programs = len(eng._prefill_programs)
+
+    total = int(lengths.sum())
+    speedup = t_serial / t_packed
+    out = {
+        "batch": b,
+        "n_instances": n_inst,
+        "page_size": page,
+        "n_layers": int(eng.pool.pools[0].n_attn),
+        "lengths": [int(x) for x in lengths],
+        "total_prompt_tokens": total,
+        "kernel_impl": impl,
+        "serial_tok_s": float(total / t_serial),
+        "packed_tok_s": float(total / t_packed),
+        "serial_s_per_batch": t_serial,
+        "packed_s_per_batch": t_packed,
+        "speedup": speedup,
+        # eager-instrumented dataflow: one prefill_packed launch per layer
+        "packed_dispatches_per_batch": packed_dispatches,
+        "prefill_packed_per_layer": (
+            packed_dispatches.get("prefill_packed", 0)
+            == int(eng.pool.pools[0].n_attn)
+        ),
+        "post_prefill_dirty_slots": int(post_dirty),
+        "distinct_compiled_prefill_programs": n_programs,
+        "sweep_batches": n_sweep + 1,
+        "log2_max_tokens": int(np.ceil(np.log2(max(max_tokens, 2)))),
+    }
+    path = "BENCH_prefill_quick.json" if quick else "BENCH_prefill.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row(
+        "prefill_packed_vs_serial",
+        t_packed * 1e6,
+        f"speedup:{speedup:.2f}x;batch:{b};programs:{n_programs};"
+        f"dirty_after:{post_dirty}",
+    )
+
+
 # -------------------------------------------------------------- roofline
 
 
@@ -459,22 +599,35 @@ BENCHES = {
     "fig14": bench_analytical_model,
     "kernels": bench_kernels,
     "decode": bench_decode_paged,
+    "prefill": bench_prefill_packed,
     "roofline": bench_roofline_summary,
 }
+
+# CI smoke: the engine hot paths (quick mode, *_quick.json artifacts);
+# failures are fatal so the benchmark paths can't silently rot.
+SMOKE = ("decode", "prefill")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: quick decode+prefill benches only; raise on error")
     args = ap.parse_args()
+    if args.smoke:
+        args.quick = True
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
+        if args.smoke and name not in SMOKE:
+            continue
         if args.only and args.only not in name:
             continue
         try:
             fn(quick=args.quick)
         except Exception as e:  # noqa: BLE001
+            if args.smoke:
+                raise
             _row(name, 0.0, f"ERROR:{type(e).__name__}:{e}")
 
 

@@ -1,0 +1,53 @@
+"""Packed ragged prefill: the model-side plug for the packed-prefill kernel.
+
+Mirrors `core.paged_decode`: the engine arms the impl for one packed prefill
+step (`begin_step` with the batch's segment offsets), runs the model's
+`prefill_packed` entry point, and disarms.  Per layer the impl issues exactly
+ONE `ops.prefill_packed` launch for the whole batch — the prompts are packed
+on a single token axis and the kernel's scalar-prefetched boundary array
+masks cross-request attention — instead of O(batch) per-request
+`model.prefill` programs, one per distinct prompt length.
+
+The impl subclasses `DefaultAttnImpl`, so outside a `begin_step`/`end_step`
+window (per-request prefill, oracle comparisons) it behaves exactly like the
+default dense math.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.kernels import ops
+from repro.models.transformer import DefaultAttnImpl
+
+
+class PackedPrefillAttnImpl(DefaultAttnImpl):
+    """Segment-masked causal attention over a packed ragged prefill batch."""
+
+    def __init__(self, impl: Optional[str] = None):
+        self._offsets = None  # [B+1] packed segment boundaries
+        self._max_seq_len: Optional[int] = None  # static reach bound
+        self._impl = impl  # kernel impl override (None -> ops default)
+
+    def begin_step(self, seq_offsets, max_seq_len: Optional[int] = None) -> None:
+        """Arm the packed path for one prefill step.  `max_seq_len` is a
+        STATIC python upper bound on the longest prompt in the batch (the
+        engine buckets it) — it sizes the banded XLA fallback's reach."""
+        self._offsets = seq_offsets
+        self._max_seq_len = max_seq_len
+
+    def end_step(self) -> None:
+        self._offsets = None
+        self._max_seq_len = None
+
+    def prefill_attn(self, q, k, v, q_pos, k_pos, *, causal, window, softcap):
+        if self._offsets is None:
+            return super().prefill_attn(
+                q, k, v, q_pos, k_pos, causal=causal, window=window,
+                softcap=softcap,
+            )
+        assert q.shape[0] == 1, "packed prefill uses batch dim 1"
+        out = ops.prefill_packed(
+            q[0], k[0], v[0], self._offsets, window=window, softcap=softcap,
+            max_seq_len=self._max_seq_len, impl=self._impl,
+        )
+        return out[None].astype(q.dtype)

@@ -196,6 +196,23 @@ class BaseServingEngine:
     def join_instance(self, inst: int, at: Optional[float] = None) -> None:
         self._push(at if at is not None else self.clock, "join", inst)
 
+    def _requeue_for_recompute(self, req: Request) -> None:
+        """Evicted-KV recovery: the request re-enters prefill over everything
+        generated so far.  The emitted tokens become part of the new prompt
+        (in real mode literally, so the recompute reproduces the exact
+        sequence) and move from the generation budget into the input — KV
+        accounting stays exact (seq_len == recomputed prompt + new tokens,
+        no double count of the folded prefix)."""
+        req.n_evictions += 1
+        req.phase = Phase.PENDING
+        if req.prompt is not None and len(req.prompt) < req.seq_len:
+            need = req.seq_len - len(req.prompt)
+            req.prompt = list(req.prompt) + list(req.output_tokens[-need:])
+        req.input_len = req.seq_len  # recompute over everything so far
+        req.max_new_tokens -= req.generated  # folded tokens are input now
+        req.generated = 0
+        req.prefill_end = None
+
     def _apply_failure(self, inst: int) -> None:
         self.failed.add(inst)
         self.busy_until[inst] = float("inf")
@@ -207,10 +224,7 @@ class BaseServingEngine:
             self.pool.free_request(rid)
             if req is None or req.phase in (Phase.FINISHED,):
                 continue
-            req.n_evictions += 1
-            req.phase = Phase.PENDING
-            req.input_len = req.seq_len  # recompute over everything so far
-            req.prefill_end = None
+            self._requeue_for_recompute(req)
             if req not in self.pending:
                 self.pending.append(req)
         self._drop_request_state(affected)
@@ -284,6 +298,8 @@ class LoongServeEngine(BaseServingEngine):
         self._real_cache: Dict[int, Any] = {}  # rid -> recurrent state (real)
         self._pending_kv: Dict[int, Any] = {}  # rid -> new kv awaiting alloc
         self._running_decode_ends: Dict[int, float] = {}  # gid -> end time
+        self._decode_launch_seq: Dict[int, Dict[int, int]] = {}  # gid -> rid -> seq
+        self._prefill_launch_epoch: Dict[int, Dict[int, int]] = {}  # bid -> rid -> n_evictions
         # batched paged decode: the multi-master paged attention impl is
         # swapped in only around a batched decode step (the model object is
         # caller-owned and may be shared between engines).  Pure-attention
@@ -291,14 +307,21 @@ class LoongServeEngine(BaseServingEngine):
         # moe stays serial because expert-capacity dropping is batch-size
         # dependent (batching would change generated tokens).
         self._paged_impl = None
-        self._kv_mirror: Dict[int, Any] = {}  # instance -> (k_dev, v_dev)
-        self._kv_scatter = None  # lazily-jitted dirty-slot mirror update
+        # packed ragged prefill: one jitted model step per bucketed
+        # (total_tokens, batch, max_len) shape — O(log max_tokens) programs
+        # instead of one per distinct prompt length.  Same family gating as
+        # the paged decode path (moe: expert-capacity dropping is
+        # batch-size dependent, packing would change generated tokens).
+        self._packed_prefill_impl = None
+        self._prefill_programs: Dict[Tuple[int, int, int], Any] = {}
         if self.real and self.cfg.family in ("dense", "vlm"):
             from repro.core.paged_decode import PagedDecodeAttnImpl
+            from repro.core.paged_prefill import PackedPrefillAttnImpl
             from repro.models.transformer import DefaultAttnImpl
 
             if type(getattr(self.model, "attn_impl", None)) is DefaultAttnImpl:
                 self._paged_impl = PagedDecodeAttnImpl()
+                self._packed_prefill_impl = PackedPrefillAttnImpl()
 
     # ------------------------------------------------------------- schedule
     def _try_schedule(self) -> None:
@@ -349,6 +372,12 @@ class LoongServeEngine(BaseServingEngine):
             end = self.clock + dur
             self._occupy(b.instances, end)
             self.metrics.prefill_iters += 1
+            # launch-time eviction-epoch stamp: prefill_done uses it to drop
+            # requests requeued (and possibly re-prefilled) by an in-flight
+            # fail_instance — their reserved placement slots are gone
+            self._prefill_launch_epoch[id(b)] = {
+                r.rid: r.n_evictions for r in b.requests
+            }
             self._push(end, "prefill_done", b)
 
         # decode batches (one iteration each; greedy execution emerges from
@@ -381,6 +410,11 @@ class LoongServeEngine(BaseServingEngine):
             )
             self.metrics.decode_iters += 1
             self._running_decode_ends[id(g)] = end
+            # launch-time sequence stamp: decode_done uses it to tell "still
+            # this iteration's request" from "requeued by a failure and
+            # already recomputed into a new group" (seq_len is monotone and
+            # only moves when a prefill/decode completion is processed)
+            self._decode_launch_seq[id(g)] = {r.rid: r.seq_len for r in g.requests}
             self._push(end, "decode_done", g)
             launched.append(g)
         for g in launched:
@@ -392,6 +426,24 @@ class LoongServeEngine(BaseServingEngine):
 
     # --------------------------------------------------------- prefill done
     def _on_prefill_done(self, batch: PrefillBatch) -> None:
+        # graceful in-flight failure (mirror of _on_decode_done): requests
+        # requeued by a fail_instance between this batch's launch and now
+        # lost their reserved placement slots — drop them (the epoch stamp
+        # also catches ones already relaunched and back in PREFILL phase).
+        epoch = self._prefill_launch_epoch.pop(id(batch), None)
+        alive = [
+            r for r in batch.requests
+            if r.phase is Phase.PREFILL
+            and (epoch is None or epoch.get(r.rid) == r.n_evictions)
+        ]
+        if len(alive) < len(batch.requests):
+            batch.requests = alive
+            batch.instances = [i for i in batch.instances if i not in self.failed]
+            batch.scale_down_to = [
+                i for i in batch.scale_down_to if i not in self.failed
+            ]
+            if not alive:
+                return
         # proactive scale-down: KV lands in the already-reserved slots of the
         # target group during the ring pass — ZERO migration bytes.
         if self.real:
@@ -415,8 +467,42 @@ class LoongServeEngine(BaseServingEngine):
             )
 
     # ---------------------------------------------------------- decode done
+    def _placement_order(self, r: Request, g: DecodeBatch) -> List[int]:
+        """KV-append probe order for one decoded token: the request's master
+        first, then the rest of the decode group, then any other live
+        instance — each instance exactly once (a rid missing from
+        `g.masters` must not probe `g.instances[0]` twice)."""
+        master = g.masters.get(r.rid, g.instances[0] if g.instances else None)
+        order = [master] if master is not None else []
+        order += [i for i in g.instances if i != master]
+        order += [
+            i for i in range(self.n)
+            if i not in g.instances and i != master
+        ]
+        return [i for i in order if i not in self.failed]
+
     def _on_decode_done(self, g: DecodeBatch) -> None:
         self._running_decode_ends.pop(id(g), None)
+        # graceful in-flight failure: a `fail_instance` landing between this
+        # group's launch and now freed some requests' KV and re-queued them
+        # to PENDING — skip those (and dead instances) instead of tripping
+        # the decode paths' KV-coverage assert.  The launch-time seq stamp
+        # additionally rejects requests that were requeued AND already
+        # recomputed into a fresh group before this stale completion fired
+        # (their seq_len moved on) — without it they would be decoded twice.
+        launch_seq = self._decode_launch_seq.pop(id(g), None)
+        alive = [
+            r for r in g.requests
+            if r.phase is Phase.DECODE
+            and (launch_seq is None or launch_seq.get(r.rid) == r.seq_len)
+        ]
+        if len(alive) < len(g.requests):
+            if not alive:
+                return
+            g = DecodeBatch(
+                alive, [i for i in g.instances if i not in self.failed],
+                g.masters,
+            )
         if self.real:
             self._real_decode(g)
         done, live = [], []
@@ -426,14 +512,14 @@ class LoongServeEngine(BaseServingEngine):
             r.generated += 1
             if not self.real:
                 r.output_tokens.append(self._sample_token())
+            if r.done:
+                # the final token's KV is never attended — don't burn a slot
+                # (and never requeue a finished request on fleet-wide OOM)
+                self._pending_kv.pop(r.rid, None)
+                done.append(r)
+                continue
             placed = False
-            order = [g.masters.get(r.rid, g.instances[0])] + [
-                i for i in g.instances if i != g.masters.get(r.rid)
-            ] + [
-                i for i in range(self.n)
-                if i not in g.instances and i not in self.failed
-            ]
-            for inst in order:
+            for inst in self._placement_order(r, g):
                 try:
                     self.pool.pools[inst].alloc(r.rid, [pos])
                     if self.real and r.rid in self._pending_kv:
@@ -445,11 +531,9 @@ class LoongServeEngine(BaseServingEngine):
                     continue
             if not placed:
                 # fleet-wide OOM: evict & requeue (counts as recompute)
+                self._pending_kv.pop(r.rid, None)
                 self.pool.free_request(r.rid)
-                r.n_evictions += 1
-                r.phase = Phase.PENDING
-                r.input_len = r.seq_len
-                r.prefill_end = None
+                self._requeue_for_recompute(r)
                 self.pending.append(r)
                 continue
             (done if r.done else live).append(r)
@@ -462,7 +546,112 @@ class LoongServeEngine(BaseServingEngine):
             self.ready_decode.append(DecodeBatch(live, g.instances, g.masters))
 
     # ----------------------------------------------------------- real compute
+    @staticmethod
+    def _bucket(n: int, lo: int = 16) -> int:
+        """Power-of-two padding bucket: O(log max) compiled shapes (shared
+        formula with the pool's scatter-index bucketing)."""
+        from repro.kvcache.pool import _pad_bucket
+
+        return max(lo, _pad_bucket(n))
+
     def _real_prefill(self, batch: PrefillBatch) -> None:
+        if self._packed_prefill_impl is not None and all(
+            r.prompt is not None and len(r.prompt) == r.input_len
+            for r in batch.requests
+        ):
+            return self._real_prefill_packed(batch)
+        return self._real_prefill_serial(batch)
+
+    def _packed_prefill_step(self, tb: int, bb: int, max_len_b: int):
+        """Jitted packed prefill program for one bucket triple; cached so
+        the compile count stays O(log max_tokens)."""
+        key = (tb, bb, max_len_b)
+        fn = self._prefill_programs.get(key)
+        if fn is None:
+            import jax
+
+            model, impl = self.model, self._packed_prefill_impl
+
+            def step(params, tokens, positions, offsets, last_idx):
+                impl.begin_step(offsets, max_len_b)
+                try:
+                    return model.prefill_packed(
+                        params, {"tokens": tokens[None]}, positions, last_idx
+                    )
+                finally:
+                    impl.end_step()
+
+            fn = self._prefill_programs[key] = jax.jit(step)
+        return fn
+
+    def _real_prefill_packed(self, batch: PrefillBatch) -> None:
+        """One packed model step for the WHOLE prefill batch: prompts are
+        concatenated on a single (bucketed) token axis, attention is
+        segment-masked by one ragged kernel launch per layer, first tokens
+        are sampled from the packed logits, and the per-layer KV output is
+        scattered straight into paged device storage at the slots the
+        scheduler reserved (`pool.fill_packed` write-through — the decode
+        mirror never re-uploads prefill KV)."""
+        import jax.numpy as jnp
+
+        reqs = batch.requests
+        lens = [len(r.prompt) for r in reqs]
+        total = sum(lens)
+        tb = self._bucket(total)
+        bb = self._bucket(len(reqs), lo=1)
+        max_len_b = self._bucket(max(lens))
+        tokens = np.zeros(tb, np.int32)
+        positions = np.zeros(tb, np.int32)
+        offsets = np.full(bb + 1, total, np.int32)
+        offsets[0] = 0
+        last_idx = np.zeros(bb, np.int32)
+        c = 0
+        for b, r in enumerate(reqs):
+            n = lens[b]
+            tokens[c : c + n] = np.asarray(r.prompt, np.int32)
+            positions[c : c + n] = np.arange(n)
+            c += n
+            offsets[b + 1] = c
+            last_idx[b] = c - 1
+        fn = self._packed_prefill_step(tb, bb, max_len_b)
+        prev_impl = self.model.attn_impl
+        self.model.attn_impl = self._packed_prefill_impl
+        try:
+            logits, (k_packed, v_packed) = fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(offsets), jnp.asarray(last_idx),
+            )
+        finally:
+            self.model.attn_impl = prev_impl
+        logits = np.asarray(logits)
+        for b, r in enumerate(reqs):
+            r.output_tokens.append(self._sample_token(logits[b]))
+        if not self.pool.pools[0].store_values:
+            return
+        # direct-to-pool paged KV writes: per instance, gather the packed
+        # columns this instance retains (striped placement from
+        # batch.placement — ESP scale-down stays zero-migration) and
+        # write-through into its mirror at the reserved block-table slots
+        starts = np.concatenate([[0], np.cumsum(lens)])
+        per_inst: Dict[int, Tuple[List[np.ndarray], List[np.ndarray]]] = {}
+        for b, r in enumerate(reqs):
+            for inst, pos_list in batch.placement.get(r.rid, {}).items():
+                if not pos_list or inst in self.failed:
+                    continue
+                p = np.asarray(pos_list, np.int64)
+                cols, slots = per_inst.setdefault(inst, ([], []))
+                cols.append(starts[b] + p)
+                slots.append(self.pool.pools[inst].slots_for(r.rid, p))
+        for inst, (cols, slots) in per_inst.items():
+            cidx = jnp.asarray(np.concatenate(cols))
+            self.pool.pools[inst].fill_packed(
+                np.concatenate(slots),
+                jnp.take(k_packed, cidx, axis=1),
+                jnp.take(v_packed, cidx, axis=1),
+            )
+
+    def _real_prefill_serial(self, batch: PrefillBatch) -> None:
+        """Per-request fallback (recurrent/hybrid state, moe capacity)."""
         import jax.numpy as jnp
 
         for r in batch.requests:
@@ -474,7 +663,7 @@ class LoongServeEngine(BaseServingEngine):
                 v = np.asarray(cache.v[:, 0], np.float32)
                 assign = batch.placement[r.rid]
                 for inst, positions in assign.items():
-                    if positions:
+                    if positions and inst not in self.failed:
                         self.pool.pools[inst].fill(
                             r.rid, positions, k[:, positions], v[:, positions]
                         )
@@ -485,45 +674,6 @@ class LoongServeEngine(BaseServingEngine):
         if self._paged_impl is not None and self.pool.pools[0].store_values:
             return self._real_decode_paged(g)
         return self._real_decode_serial(g)
-
-    def _device_kv(self, pool):
-        """Incrementally-synced device mirror of one pool's (K, V, slot_pos)
-        storage.  Steady-state decode uploads only the slots written since
-        the last iteration (one per request), not the pool."""
-        import jax
-        import jax.numpy as jnp
-
-        full, dirty = pool.consume_dirty()
-        cur = self._kv_mirror.get(pool.instance_id)
-        if cur is None or full:
-            cur = (jnp.asarray(pool.k), jnp.asarray(pool.v),
-                   jnp.asarray(pool.slot_pos))
-        elif len(dirty):
-            if self._kv_scatter is None:
-                # donation keeps the scatter O(dirty) and allocation-free on
-                # accelerators; CPU doesn't implement donation and falls back
-                # to a copy
-                donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
-                self._kv_scatter = jax.jit(
-                    lambda kd, vd, pd, idx, kn, vn, pn: (
-                        kd.at[:, idx].set(kn), vd.at[:, idx].set(vn),
-                        pd.at[idx].set(pn),
-                    ),
-                    donate_argnums=donate,
-                )
-            # pad the index vector to a power-of-two bucket (duplicating the
-            # last slot is idempotent) so jit compiles one scatter per bucket
-            # instead of one per distinct dirty count
-            n = len(dirty)
-            bucket = 1 << (n - 1).bit_length()
-            idx = np.concatenate([dirty, np.full(bucket - n, dirty[-1])])
-            cur = self._kv_scatter(
-                cur[0], cur[1], cur[2], jnp.asarray(idx),
-                jnp.asarray(pool.k[:, idx]), jnp.asarray(pool.v[:, idx]),
-                jnp.asarray(pool.slot_pos[idx]),
-            )
-        self._kv_mirror[pool.instance_id] = cur
-        return cur
 
     def _real_decode_paged(self, g: DecodeBatch) -> None:
         """Gather-free batched decode: ONE model step for the whole group;
@@ -544,7 +694,9 @@ class LoongServeEngine(BaseServingEngine):
             if not lengths.any():
                 continue
             covered += lengths
-            kdev, vdev, posdev = self._device_kv(pool)
+            # pool-owned incrementally-synced mirror: steady-state decode
+            # uploads one slot per request; packed-prefill slots upload 0
+            kdev, vdev, posdev = pool.device_kv()
             paged_shape = (pool.n_attn, pool.n_pages, pool.page_size) + kdev.shape[2:]
             shards.append(PagedShard(
                 k_pages=kdev.reshape(paged_shape),
@@ -615,7 +767,15 @@ class LoongServeEngine(BaseServingEngine):
         super()._apply_failure(inst)
         # drop the failed instance's device KV mirror (a full pool-sized
         # copy) — it will be rebuilt from scratch if the instance rejoins
-        self._kv_mirror.pop(inst, None)
+        if inst < len(self.pool.pools):
+            self.pool.pools[inst].drop_mirror()
+        # purge requeued (now-PENDING) requests and the dead instance from
+        # waiting decode groups so they are not scheduled with freed KV
+        for g in list(self.ready_decode):
+            g.requests = [r for r in g.requests if r.phase is Phase.DECODE]
+            g.instances = [i for i in g.instances if i not in self.failed]
+            if not g.requests:
+                self.ready_decode.remove(g)
 
     def _drop_request_state(self, rids) -> None:
         for rid in rids:
@@ -627,3 +787,9 @@ class LoongServeEngine(BaseServingEngine):
     def _restore_extra(self, extra) -> None:
         if extra:
             self.ready_decode = extra["ready_decode"]
+        # transient launch-time state is keyed by id() of pre-restore batch
+        # objects — drop it (in-flight completions fall back to the
+        # phase-only liveness filter)
+        self._running_decode_ends = {}
+        self._decode_launch_seq = {}
+        self._prefill_launch_epoch = {}

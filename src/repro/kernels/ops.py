@@ -29,6 +29,9 @@ from repro.kernels.flash_decode import flash_decode_partial as _fd_kernel
 from repro.kernels.paged_flash_decode import (
     paged_flash_decode_partial as _pfd_kernel,
 )
+from repro.kernels.paged_flash_prefill import (
+    packed_flash_prefill as _pfp_kernel,
+)
 from repro.kernels.striped_attention import striped_flash_attention as _sa_kernel
 from repro.models.attention import Partial
 
@@ -95,6 +98,28 @@ def decode_partial(
     return _fd_kernel(
         q, k, v, lengths, k_pos_offset=k_pos_offset, window=window,
         softcap=softcap, block_k=block_k, interpret=(impl == "interpret"),
+    )
+
+
+def prefill_packed(
+    q, k, v, seq_offsets, *, window=None, softcap=None, max_seq_len=None,
+    impl: Optional[str] = None, block_q: int = 128, block_k: int = 128,
+):
+    """Packed ragged causal prefill: ONE launch for a whole prefill batch
+    concatenated on a single token axis (see kernels/paged_flash_prefill.py).
+    ``max_seq_len`` (static) bounds the banded XLA fallback's reach; the
+    Pallas kernel skips non-interacting tiles from the prefetched offsets."""
+    impl = impl or _DEFAULT_IMPL
+    dispatch_counts["prefill_packed"] += 1
+    if impl == "xla":
+        return ref.packed_prefill_banded(
+            q, k, v, seq_offsets, window=window, softcap=softcap,
+            block_q=block_q, max_seq_len=max_seq_len,
+        )
+    return _pfp_kernel(
+        q, k, v, jnp.asarray(seq_offsets, jnp.int32), window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"),
     )
 
 

@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: packed ragged causal flash prefill over one token axis.
+
+One launch serves EVERY prefill request of a batch: the prompts are
+concatenated ("packed") along a single token axis of bucketed length T, and
+the grid runs over ``(kv_head_group, q_block, k_block)``.  Per-sequence
+boundaries ride in through a scalar-prefetched offsets array — available in
+SMEM before the kernel body runs — so each program derives segment ids for
+its q/k tiles and (a) skips tiles whose segment ranges cannot interact and
+(b) masks cross-request attention inside mixed tiles.  This replaces
+O(batch) per-request `model.prefill` launches (one XLA program per distinct
+prompt length) with ONE program per bucket.
+
+Contract:
+  * ``q``: [T, H, D]; ``k``/``v``: [T, KVH, D] — the packed batch, padded to
+    a bucketed T (the engine buckets to powers of two so O(log max_tokens)
+    programs cover every batch);
+  * ``seq_offsets``: [B+1] int32 — request b occupies packed positions
+    ``[seq_offsets[b], seq_offsets[b+1])``.  Trailing entries may repeat the
+    total (empty segments from batch-count bucketing); padding tokens past
+    ``seq_offsets[-1]`` form their own segment and never reach real rows.
+  * causality is evaluated in PACKED coordinates: within one segment the
+    packed order equals the local order, so ``tq >= tk`` (and the window
+    predicate ``tq - tk < window`` — repo convention, self-inclusive) need
+    no per-token local positions.  RoPE uses local positions outside the
+    kernel, so the striped/packed layout stays transparent to the model.
+
+Emits the NORMALIZED output (prefill is local to the packed batch — no
+cross-instance combine is needed; the ESP ring path keeps its own kernel).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    off_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+    scale: float,
+    window: Optional[int],
+    softcap: Optional[float],
+    block_q: int,
+    block_k: int,
+    n_seqs: int,
+    n_k_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # packed token indices of this tile pair
+    tq = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    tk = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+
+    def seg_ids(t):
+        """Segment id per packed index: #offsets[1..B] <= t (monotone)."""
+
+        def body(b, acc):
+            return acc + jnp.where(t >= off_ref[b + 1], 1, 0)
+
+        return jax.lax.fori_loop(0, n_seqs, body, jnp.zeros_like(t))
+
+    seg_q = seg_ids(tq)  # [block_q, 1]
+    seg_k = seg_ids(tk)  # [1, block_k]
+
+    # tile-level skip: causal reach, segment-range overlap (seg ids are
+    # monotone in t, so ranges are the tile corners), window reach
+    run = ik * block_k <= iq * block_q + block_q - 1
+    run &= (seg_k[0, 0] <= seg_q[block_q - 1, 0]) & (
+        seg_q[0, 0] <= seg_k[0, block_k - 1]
+    )
+    if window is not None:
+        run &= (iq * block_q - (ik * block_k + block_k - 1)) < window
+
+    @pl.when(run)
+    def _update():
+        qpk = q_ref.shape[1]
+        qb = q_ref[...].astype(jnp.float32).reshape(block_q * qpk, -1)
+        kb = k_ref[:, 0, :].astype(jnp.float32)  # [block_k, D]
+        vb = v_ref[:, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [block_q * qpk, block_k]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (seg_q == seg_k) & (tq >= tk)
+        if window is not None:
+            mask &= (tq - tk) < window
+        mask = jnp.broadcast_to(
+            mask[:, None, :], (block_q, qpk, block_k)
+        ).reshape(block_q * qpk, block_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_blk = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        m_safe = jnp.maximum(m_new, -1e29)  # fully-masked-row guard
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[:, 0] = jnp.where(m_blk <= NEG_INF / 2, m_prev, m_new)
+        l_ref[:, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _emit():
+        l = l_ref[:, 0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / denom[:, None]).reshape(o_ref.shape)
+
+
+def packed_flash_prefill(
+    q: jnp.ndarray,  # [T, H, D] packed batch
+    k: jnp.ndarray,  # [T, KVH, D]
+    v: jnp.ndarray,
+    seq_offsets: jnp.ndarray,  # [B+1] int32 segment boundaries
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One ragged batched launch over the packed token axis; returns the
+    normalized attention output [T, H, D] (f32)."""
+    t, h, d = q.shape
+    kvh = k.shape[1]
+    q_per_kv = h // kvh
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    n_seqs = int(seq_offsets.shape[0]) - 1
+    nq, nk = t // block_q, t // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, n_seqs=n_seqs, n_k_blocks=nk,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # seq_offsets
+        grid=(kvh, nq, nk),
+        in_specs=[
+            # q heads for this kv group: [block_q, q_per_kv, D]
+            pl.BlockSpec(
+                (block_q, q_per_kv, d), lambda g, iq, ik, off: (iq, g, 0)
+            ),
+            pl.BlockSpec((block_k, 1, d), lambda g, iq, ik, off: (ik, g, 0)),
+            pl.BlockSpec((block_k, 1, d), lambda g, iq, ik, off: (ik, g, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_q, q_per_kv, d), lambda g, iq, ik, off: (iq, g, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * q_per_kv, d), jnp.float32),
+            pltpu.VMEM((block_q * q_per_kv, 1), jnp.float32),
+            pltpu.VMEM((block_q * q_per_kv, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, h, d), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(seq_offsets, jnp.int32), q, k, v)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.models import attention as A
@@ -31,6 +32,79 @@ def flash_decode_partial_ref(
         valid &= pos[None, :] > (cl[:, None] - window)
     mask = jnp.broadcast_to(valid[:, None, :], (b, q.shape[1], s))
     return A.partial_attention(q, k, v, mask, softcap=softcap)
+
+
+def packed_prefill_ref(
+    q, k, v, seq_offsets, *, window=None, softcap=None
+):
+    """Dense segment-mask oracle for packed ragged prefill (tests only:
+    O(T^2) score matrix).  Causality/window are evaluated in packed
+    coordinates — within a segment the packed order IS the local order."""
+    t = q.shape[0]
+    ti = jnp.arange(t, dtype=jnp.int32)
+    seg = A.packed_segment_ids(seq_offsets, t)
+    mask = (seg[:, None] == seg[None, :]) & (ti[:, None] >= ti[None, :])
+    if window is not None:
+        mask &= (ti[:, None] - ti[None, :]) < window
+    out = A.finalize_partial(
+        A.partial_attention(q[None], k[None], v[None], mask[None],
+                            softcap=softcap)
+    )
+    return out[0]
+
+
+def packed_prefill_banded(
+    q, k, v, seq_offsets, *, window=None, softcap=None, block_q=128,
+    max_seq_len=None,
+):
+    """Production XLA fallback for packed ragged prefill.
+
+    Scans over q blocks; each block attends a banded K/V window that is
+    guaranteed to cover its segments' prefixes (a segment reaches back at
+    most ``max_seq_len - 1`` packed positions, less under sliding window),
+    with the segment mask killing cross-request pairs inside the band.
+    Work is O(T * band) instead of the oracle's O(T^2) — the XLA analogue
+    of the Pallas kernel's tile skipping.  ``max_seq_len`` must be a static
+    upper bound on the longest segment (None = no bound, full reach).
+    """
+    t, h, d = q.shape
+    blk = min(block_q, t)
+    while t % blk:  # defensive: engine buckets t to powers of two
+        blk //= 2
+    nb = t // blk
+    reach = t if max_seq_len is None else min(int(max_seq_len), t)
+    if window is not None:
+        reach = min(reach, window)
+    w = min(-(-max(reach - 1, 0) // blk) + 1, nb)  # band width in blocks
+    ti = jnp.arange(t, dtype=jnp.int32)
+    seg = A.packed_segment_ids(seq_offsets, t)
+    pad = (w - 1) * blk
+    kp = jnp.pad(k, ((pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((pad, 0), (0, 0), (0, 0)))
+    segp = jnp.pad(seg, (pad, 0), constant_values=-1)  # pad rows never match
+    tkp = jnp.pad(ti, (pad, 0), constant_values=-1)
+
+    def body(_, i):
+        s0 = i * blk  # band [s0, s0 + w*blk) of the padded axis ends at the
+        # q block's end: global keys [s0 - pad, (i+1)*blk)
+        qb = jax.lax.dynamic_slice_in_dim(q, s0, blk)
+        tqb = jax.lax.dynamic_slice_in_dim(ti, s0, blk)
+        sqb = jax.lax.dynamic_slice_in_dim(seg, s0, blk)
+        kb = jax.lax.dynamic_slice_in_dim(kp, s0, w * blk)
+        vb = jax.lax.dynamic_slice_in_dim(vp, s0, w * blk)
+        tkb = jax.lax.dynamic_slice_in_dim(tkp, s0, w * blk)
+        skb = jax.lax.dynamic_slice_in_dim(segp, s0, w * blk)
+        mask = (sqb[:, None] == skb[None, :]) & (tqb[:, None] >= tkb[None, :])
+        if window is not None:
+            mask &= (tqb[:, None] - tkb[None, :]) < window
+        out = A.finalize_partial(
+            A.partial_attention(qb[None], kb[None], vb[None], mask[None],
+                                softcap=softcap)
+        )[0]
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nb))
+    return outs.reshape(t, h, d)
 
 
 def paged_flash_decode_partial_ref(

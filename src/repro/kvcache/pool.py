@@ -18,10 +18,28 @@ whole free pages only (conservative), while a request can always extend into
 its own tail slack.
 
 All bookkeeping is vectorized numpy (free page stack, per-request page/pos
-arrays) — no per-token dicts anywhere on the hot path.  Storage is host-side
-numpy (the management plane); the engine keeps an incrementally-updated device
-mirror fed by `consume_dirty()`.  `bytes_per_slot` reflects the real bf16 KV
-footprint so pool capacities model HBM honestly.
+arrays) — no per-token dicts anywhere on the hot path.  `bytes_per_slot`
+reflects the real bf16 KV footprint so pool capacities model HBM honestly.
+
+KV lifecycle (host bookkeeping vs device-resident storage)
+----------------------------------------------------------
+The pool holds TWO coupled copies of the stored KV:
+
+  * the host numpy arrays ``k``/``v``/``slot_pos`` — the management plane.
+    Placement planning, migration, gather, SWA eviction and checkpoints all
+    read/write these; they are cheap to mutate token-granularly.
+  * a device mirror (``device_kv()``) — the compute plane the paged decode
+    kernel attends *in place* through block tables.
+
+Writes through ``write``/``fill`` land on the host copy and mark the touched
+slots dirty; the next ``device_kv()`` call uploads only those slots (or does
+one full resync after load/failure).  ``fill_packed`` is the write-through
+fast path for packed prefill: the KV is already device-resident (produced by
+the packed prefill step), so it is scattered straight into the mirror
+device-to-device and the host copy is updated WITHOUT dirtying — the next
+decode's mirror sync uploads nothing for those slots.  The
+``mirror_full_syncs``/``mirror_uploaded_slots`` counters let tests and
+benchmarks assert that invariant.
 """
 from __future__ import annotations
 
@@ -35,6 +53,34 @@ from repro.configs.base import ModelConfig
 
 class OutOfSlots(RuntimeError):
     pass
+
+
+_MIRROR_SCATTER = None
+
+
+def _mirror_scatter():
+    """Lazily-jitted (K, V, slot_pos) mirror scatter, shared by the dirty
+    sync and the packed-prefill write-through.  Donation keeps it O(idx) and
+    allocation-free on accelerators; CPU falls back to a copy."""
+    global _MIRROR_SCATTER
+    if _MIRROR_SCATTER is None:
+        import jax
+
+        donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+        _MIRROR_SCATTER = jax.jit(
+            lambda kd, vd, pd, idx, kn, vn, pn: (
+                kd.at[:, idx].set(kn), vd.at[:, idx].set(vn),
+                pd.at[idx].set(pn),
+            ),
+            donate_argnums=donate,
+        )
+    return _MIRROR_SCATTER
+
+
+def _pad_bucket(n: int) -> int:
+    """Power-of-two bucket so the jitted scatter compiles O(log capacity)
+    variants instead of one per distinct index count."""
+    return 1 << max(n - 1, 0).bit_length()
 
 
 @dataclass
@@ -105,10 +151,13 @@ class KVPool:
             shape = (n_attn, self.capacity, cfg.n_kv_heads, cfg.head_dim)
             self.k = np.zeros(shape, np.float32)
             self.v = np.zeros(shape, np.float32)
-        # device-mirror dirty tracking (engine-side incremental sync)
+        # device-mirror dirty tracking + the mirror itself (compute plane)
         self._dirty_full = True
         self._dirty: List[np.ndarray] = []
         self._dirty_count = 0
+        self._mirror = None  # (k_dev, v_dev, slot_pos_dev) jax arrays
+        self.mirror_full_syncs = 0
+        self.mirror_uploaded_slots = 0
 
     # ------------------------------------------------------------- accounting
     @property
@@ -257,6 +306,12 @@ class KVPool:
             self._dirty.clear()
             self._dirty_count = 0
 
+    def dirty_slot_count(self) -> int:
+        """Slots the next `device_kv()` sync would upload (capacity if a
+        full resync is pending) — the public probe for the write-through
+        invariant: 0 right after a packed prefill."""
+        return self.capacity if self._dirty_full else self._dirty_count
+
     def consume_dirty(self) -> Tuple[bool, np.ndarray]:
         """(full_resync_needed, dirty slot ids) since the last call; resets.
         The engine's device mirror applies these incrementally instead of
@@ -280,16 +335,12 @@ class KVPool:
             self.v[:, slots] = np.asarray(v, np.float32)
             self._mark_dirty(slots)
 
-    def fill(self, request_id: int, positions: Sequence[int],
-             k: np.ndarray, v: np.ndarray) -> None:
-        """Write values into ALREADY-RESERVED slots (proactive scale-down:
-        the scheduler reserves placement, the prefill ring fills it)."""
-        if not self.store_values:
-            return
+    def slots_for(self, request_id: int, positions: Sequence[int]) -> np.ndarray:
+        """Slot ids of ALREADY-ALLOCATED global positions (any order)."""
         st = self._reqs[request_id]
         pos = np.asarray(positions, np.int64)
         if len(pos) == 0:
-            return
+            return np.empty(0, np.int64)
         cur = st.pos[: st.n_tok]
         sorter = np.argsort(cur, kind="stable")
         # clip so an unknown position reaches the diagnostic assert below
@@ -297,10 +348,88 @@ class KVPool:
         ss = np.minimum(np.searchsorted(cur, pos, sorter=sorter), st.n_tok - 1)
         li = sorter[ss]
         assert (cur[li] == pos).all(), (request_id, positions)
-        slots = self.slots_of_state(st)[li]
+        return self.slots_of_state(st)[li]
+
+    def fill(self, request_id: int, positions: Sequence[int],
+             k: np.ndarray, v: np.ndarray) -> None:
+        """Write values into ALREADY-RESERVED slots (proactive scale-down:
+        the scheduler reserves placement, the prefill ring fills it)."""
+        if not self.store_values:
+            return
+        slots = self.slots_for(request_id, positions)
+        if len(slots) == 0:
+            return
         self.k[:, slots] = np.asarray(k, np.float32)
         self.v[:, slots] = np.asarray(v, np.float32)
         self._mark_dirty(slots)
+
+    # --------------------------------------------------------- device mirror
+    def device_kv(self):
+        """Incrementally-synced device mirror of the (K, V, slot_pos)
+        storage.  Steady-state decode uploads only the slots written since
+        the last call (one per request per iteration), not the pool; slots
+        landed through `fill_packed` were written device-side already and
+        upload nothing."""
+        import jax.numpy as jnp
+
+        assert self.store_values, "device mirror needs value storage"
+        full, dirty = self.consume_dirty()
+        cur = self._mirror
+        if cur is None or full:
+            cur = (jnp.asarray(self.k), jnp.asarray(self.v),
+                   jnp.asarray(self.slot_pos))
+            self.mirror_full_syncs += 1
+            self.mirror_uploaded_slots += self.capacity
+        elif len(dirty):
+            n = len(dirty)
+            bucket = _pad_bucket(n)
+            idx = np.concatenate([dirty, np.full(bucket - n, dirty[-1])])
+            cur = _mirror_scatter()(
+                cur[0], cur[1], cur[2], jnp.asarray(idx),
+                jnp.asarray(self.k[:, idx]), jnp.asarray(self.v[:, idx]),
+                jnp.asarray(self.slot_pos[idx]),
+            )
+            self.mirror_uploaded_slots += n
+        self._mirror = cur
+        return cur
+
+    def drop_mirror(self) -> None:
+        """Invalidate the device mirror (instance failure / state restore);
+        the next `device_kv()` rebuilds it with one full upload."""
+        self._mirror = None
+        self._dirty_full = True
+        self._dirty = []
+        self._dirty_count = 0
+
+    def fill_packed(self, slots: np.ndarray, k_dev, v_dev) -> None:
+        """Device-side write-through fill: scatter DEVICE-RESIDENT KV (e.g.
+        the packed prefill step's per-layer output) straight into the mirror
+        at `slots` (block-table rows), then update the host management copy
+        WITHOUT dirtying — the next `device_kv()` sync uploads nothing for
+        these slots.  `k_dev`/`v_dev`: [n_attn, len(slots), KVH, D]."""
+        if not self.store_values:
+            return
+        import jax.numpy as jnp
+
+        slots = np.asarray(slots, np.int64)
+        n = len(slots)
+        if n == 0:
+            return
+        kd, vd, pd = self.device_kv()  # sync any stale dirty slots first
+        bucket = _pad_bucket(n)
+        idx = np.concatenate([slots, np.full(bucket - n, slots[-1])])
+        kn, vn = jnp.asarray(k_dev, kd.dtype), jnp.asarray(v_dev, vd.dtype)
+        if bucket > n:
+            reps = (1, bucket - n) + (1,) * (kn.ndim - 2)
+            kn = jnp.concatenate([kn, jnp.tile(kn[:, -1:], reps)], axis=1)
+            vn = jnp.concatenate([vn, jnp.tile(vn[:, -1:], reps)], axis=1)
+        self._mirror = _mirror_scatter()(
+            kd, vd, pd, jnp.asarray(idx), kn, vn,
+            jnp.asarray(self.slot_pos[idx]),
+        )
+        # host management copy (migration / gather / SWA compaction read it)
+        self.k[:, slots] = np.asarray(k_dev, np.float32)
+        self.v[:, slots] = np.asarray(v_dev, np.float32)
 
     def gather(self, request_id: int) -> Tuple[np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
         """Returns (positions sorted, k, v) for this instance's share.
@@ -379,9 +508,7 @@ class KVPool:
             st.append_pages(np.asarray(pages, np.int32))
             st.append_pos(np.asarray(pos, np.int64))
             self._reqs[rid] = st
-        self._dirty_full = True
-        self._dirty = []
-        self._dirty_count = 0
+        self.drop_mirror()
 
     def evict(self, request_id: int) -> int:
         """Evict a request entirely (recompute later). Returns freed tokens."""

@@ -55,6 +55,16 @@ def gqa_expand(kv: jnp.ndarray, q_per_kv: int) -> jnp.ndarray:
     )
 
 
+def packed_segment_ids(seq_offsets: jnp.ndarray, t: int) -> jnp.ndarray:
+    """Segment id per packed token index for a ragged batch concatenated on
+    one token axis: request b owns ``[seq_offsets[b], seq_offsets[b+1])``.
+    Tokens past ``seq_offsets[-1]`` (bucket padding) get segment id B and
+    never interact with real rows."""
+    off = jnp.asarray(seq_offsets, jnp.int32)
+    ti = jnp.arange(t, dtype=jnp.int32)
+    return jnp.sum(ti[:, None] >= off[None, 1:], axis=1).astype(jnp.int32)
+
+
 def mask_from_positions(
     q_pos: jnp.ndarray,  # [Sq] or [B, Sq] int32 global positions
     k_pos: jnp.ndarray,  # [Sk] or [B, Sk]

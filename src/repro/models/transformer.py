@@ -497,6 +497,28 @@ class Model:
             x = jnp.einsum("bsd,s->bd", x, sel)[:, None, :]
         return self.unembed(params, x), cache
 
+    def prefill_packed(
+        self, params, batch, positions, last_idx
+    ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """Packed ragged prefill: a whole batch of prompts concatenated on
+        ONE token axis (batch dim 1).  `positions` are per-token LOCAL
+        positions (so RoPE/window stay per-request correct) and the armed
+        attention impl (core.paged_prefill.PackedPrefillAttnImpl) applies
+        the segment mask that keeps requests from attending each other.
+        `last_idx` [B] selects each request's final packed token; only those
+        rows are unembedded, so the [T, V] logits tensor is never
+        materialized.  Returns (logits [B, V], (k, v) packed per-layer KV
+        [L, T, KVH, D]) — the KV that `kvcache.pool.fill_packed` scatters
+        straight into paged device storage."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm"), cfg.family
+        x = self.embed_inputs(params, batch)  # [1, T, d]
+        x, _, kvs = self._dense_stack(params, x, positions, return_kv=True)
+        k, v = kvs  # [L, 1, T, KVH, D]
+        sel = jnp.take(x[0], jnp.asarray(last_idx, jnp.int32), axis=0)
+        logits = self.unembed(params, sel[None])[0]  # [B, V]
+        return logits, (k[:, 0], v[:, 0])
+
     def decode(self, params, tokens, cache: Cache) -> Tuple[jnp.ndarray, Cache]:
         """One decode step. tokens [B] or [B,1]. Returns (logits [B,V],
         updated cache metadata + per-layer new KV stacked like the cache);
