@@ -555,6 +555,122 @@ def bench_prefill_packed(quick: bool = False):
     )
 
 
+# ------------------------------------------------- ring-fused DoP>1 prefill
+
+
+def bench_prefill_ring(quick: bool = False):
+    """Ring-fused packed prefill for multi-instance (DoP>1) ESP groups on the
+    REAL engine hot path: per-request serial prefill (the pre-fusion fallback
+    for scaled-up groups — one eager model.prefill per request) vs the packed
+    ring (ONE jitted packed step per batch; attention runs one packed ragged
+    chunk launch per instance per ring step with carried flash state), at
+    DoP in {1, 2, 4}.  Same model, same pools, same PrefillBatch with
+    reserved striped placement.  Writes BENCH_prefill_ring.json."""
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.configs import REGISTRY, reduced
+    from repro.engine.request import Phase, Request
+    from repro.engine.server import LoongServeEngine
+    from repro.kernels import ops
+    from repro.manager.scheduler import PrefillBatch
+    from repro.models import build_model
+
+    cfg = reduced(REGISTRY["lwm-7b"])
+    page = 64
+    b = 4 if quick else 8
+    iters = 2 if quick else 3
+    lo, hi = (64, 256) if quick else (256, 1024)
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(lo, hi + 1, b)
+    lengths[0], lengths[-1] = lo, hi  # span guaranteed
+    total = int(lengths.sum())
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    impl = ops.get_default_impl()
+    results = {}
+    for dop in (1, 2, 4):
+        capacity = (-(-total // page) + 16) * page  # per instance
+        eng = LoongServeEngine(cfg, dop, capacity, store_values=True,
+                               model=model, params=params, page_size=page)
+        reqs, placement = [], {}
+        for rid, ln in enumerate(lengths):
+            n = int(ln)
+            r = Request(input_len=n, max_new_tokens=8,
+                        prompt=rng.integers(0, cfg.vocab_size, n).tolist())
+            r.rid, r.phase = rid, Phase.PREFILL
+            plan = eng.pool.plan_placement(rid, list(range(n)), range(dop))
+            eng.pool.place(plan)  # reserve slots; the ring fills the values
+            placement[rid] = plan.assignment
+            reqs.append(r)
+        batch = PrefillBatch(reqs, list(range(dop)),
+                             scale_down_to=list(range(dop)),
+                             placement=placement)
+
+        def reset():
+            for r in reqs:
+                r.output_tokens = []
+
+        def run_arm(step):
+            reset()
+            step(batch)  # warmup / compile
+            best = float("inf")
+            for _ in range(iters):
+                reset()
+                t0 = time.perf_counter()
+                step(batch)
+                best = min(best, time.perf_counter() - t0)
+            return best  # min-of-iters: robust to background load spikes
+
+        t_serial = run_arm(eng._real_prefill_serial)
+        t_packed = run_arm(eng._real_prefill_packed)
+        # eager-instrumented dataflow: zero per-request serial model.prefill
+        # calls, dop^2 ring-chunk launches per layer (1 per instance per
+        # ring step) — the jitted step fuses them, so count with disable_jit
+        ops.reset_dispatch_counts()
+        with jax.disable_jit():
+            reset()
+            eng._real_prefill_packed(batch)
+        d = dict(ops.dispatch_counts)
+        results[f"dop{dop}"] = {
+            "serial_tok_s": float(total / t_serial),
+            "packed_tok_s": float(total / t_packed),
+            "serial_s_per_batch": t_serial,
+            "packed_s_per_batch": t_packed,
+            "speedup": t_serial / t_packed,
+            "packed_dispatches_per_batch": d,
+            "serial_model_prefill_calls": d.get("prefill_serial_model", 0),
+            "post_prefill_dirty_slots": int(
+                sum(p.dirty_slot_count() for p in eng.pool.pools)
+            ),
+            "host_syncs": int(sum(p.host_syncs for p in eng.pool.pools)),
+        }
+    out = {
+        "batch": b,
+        "page_size": page,
+        "n_layers": int(cfg.n_attention_applications),
+        "lengths": [int(x) for x in lengths],
+        "total_prompt_tokens": total,
+        "kernel_impl": impl,
+        **results,
+        "dop2_speedup": results["dop2"]["speedup"],
+    }
+    path = "BENCH_prefill_ring_quick.json" if quick else "BENCH_prefill_ring.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row(
+        "prefill_ring_vs_serial",
+        results["dop2"]["packed_s_per_batch"] * 1e6,
+        ";".join(
+            f"{k}_speedup:{v['speedup']:.2f}x" for k, v in results.items()
+        ) + f";batch:{b};serial_calls_in_packed:"
+        f"{results['dop2']['serial_model_prefill_calls']}",
+    )
+
+
 # -------------------------------------------------------------- roofline
 
 
@@ -600,12 +716,13 @@ BENCHES = {
     "kernels": bench_kernels,
     "decode": bench_decode_paged,
     "prefill": bench_prefill_packed,
+    "prefill_ring": bench_prefill_ring,
     "roofline": bench_roofline_summary,
 }
 
 # CI smoke: the engine hot paths (quick mode, *_quick.json artifacts);
 # failures are fatal so the benchmark paths can't silently rot.
-SMOKE = ("decode", "prefill")
+SMOKE = ("decode", "prefill", "prefill_ring")
 
 
 def main() -> None:

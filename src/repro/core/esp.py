@@ -64,6 +64,66 @@ def _slice_kv_heads(k, v, tp_idx, h_local: int, q_per_kv: int):
     return k, v
 
 
+def ring_packed_prefill(
+    q, k, v, seq_offsets, n_shards: int, *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    max_seq_len: Optional[int] = None,
+    impl: Optional[str] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """Ring-fused packed ragged prefill for one DoP>1 ESP group (single-
+    process simulation of the striped ppermute ring).
+
+    The packed token axis [T] is striped across the group's ``n_shards``
+    instances (global packed index ``g`` -> shard ``g % n``, local slot
+    ``g // n``).  Every instance starts holding its own KV stripe; the ring
+    then replays `striped.ring_chunk_schedule` — the exact chunk rotation the
+    SPMD `ring_pairs` ppermute produces — and at each step each instance
+    folds the chunk it currently holds into its carried (acc, m, l) flash
+    state with ONE packed ragged `ops.prefill_ring_chunk` launch.  n steps
+    make every query meet every key exactly once (zero redundant compute);
+    the per-instance states then finalize LSE-style (the same
+    max/sum-exp-weighted merge decode's multi-master combine uses, folded
+    into the carry) and un-stripe back to the packed order.
+
+    q [T,H,D], k/v [T,KVH,D] in PACKED order; returns the normalized
+    [T,H,D] f32 output, numerically equal to `ops.prefill_packed`."""
+    from repro.kernels import ops
+
+    t = q.shape[0]
+    n = int(n_shards)
+    assert n >= 1 and t % n == 0, (t, n)
+    if n == 1:
+        return ops.prefill_packed(
+            q, k, v, seq_offsets, window=window, softcap=softcap,
+            max_seq_len=max_seq_len, impl=impl, block_q=block_q,
+            block_k=block_k,
+        )
+    qs = [q[r::n] for r in range(n)]
+    ks = [k[r::n] for r in range(n)]
+    vs = [v[r::n] for r in range(n)]
+    offs = [striped.shard_offsets(seq_offsets, n, r) for r in range(n)]
+    sched = striped.ring_chunk_schedule(n)
+    carries: list = [None] * n
+    for step in range(n):
+        for r in range(n):
+            c = sched[step][r]
+            carries[r] = ops.prefill_ring_chunk(
+                qs[r], ks[c], vs[c], offs[r], offs[c], carries[r],
+                q_shard=r, k_shard=c, n_shards=n, window=window,
+                softcap=softcap, max_seq_len=max_seq_len, impl=impl,
+                block_q=block_q, block_k=block_k,
+            )
+    outs = []
+    for r in range(n):
+        o, m, l = carries[r]
+        denom = jnp.where(l == 0.0, 1.0, l)  # l==0 rows are bucket padding
+        outs.append(o / denom[..., None])
+    return striped.unstripe(jnp.concatenate(outs, axis=0), n, axis=0)
+
+
 class ESPAttnImpl(DefaultAttnImpl):
     def __init__(
         self,

@@ -8,6 +8,14 @@ on a single token axis and the kernel's scalar-prefetched boundary array
 masks cross-request attention — instead of O(batch) per-request
 `model.prefill` programs, one per distinct prompt length.
 
+DoP>1 ESP groups arm the same impl with ``dop=n``: the packed axis is then
+striped across the group's n instances and attention runs as the fused
+striped ring (`core.esp.ring_packed_prefill`) — one packed ragged
+`ops.prefill_ring_chunk` launch per instance per ring step, carrying the
+(acc, m, l) flash state across steps — so the paper's long-prompt
+multi-instance prefill gets packed-kernel speed instead of the per-request
+serial fallback.
+
 The impl subclasses `DefaultAttnImpl`, so outside a `begin_step`/`end_step`
 window (per-request prefill, oracle comparisons) it behaves exactly like the
 default dense math.
@@ -26,18 +34,26 @@ class PackedPrefillAttnImpl(DefaultAttnImpl):
     def __init__(self, impl: Optional[str] = None):
         self._offsets = None  # [B+1] packed segment boundaries
         self._max_seq_len: Optional[int] = None  # static reach bound
+        self._dop: int = 1  # ESP group size: >1 runs the fused striped ring
         self._impl = impl  # kernel impl override (None -> ops default)
 
-    def begin_step(self, seq_offsets, max_seq_len: Optional[int] = None) -> None:
+    def begin_step(
+        self, seq_offsets, max_seq_len: Optional[int] = None, dop: int = 1
+    ) -> None:
         """Arm the packed path for one prefill step.  `max_seq_len` is a
         STATIC python upper bound on the longest prompt in the batch (the
-        engine buckets it) — it sizes the banded XLA fallback's reach."""
+        engine buckets it) — it sizes the banded XLA fallback's reach.
+        `dop` (STATIC) is the ESP group size: with dop>1 the packed token
+        axis (which the engine buckets to a multiple of dop) stripes across
+        the group and attention runs the fused ring."""
         self._offsets = seq_offsets
         self._max_seq_len = max_seq_len
+        self._dop = int(dop)
 
     def end_step(self) -> None:
         self._offsets = None
         self._max_seq_len = None
+        self._dop = 1
 
     def prefill_attn(self, q, k, v, q_pos, k_pos, *, causal, window, softcap):
         if self._offsets is None:
@@ -46,8 +62,18 @@ class PackedPrefillAttnImpl(DefaultAttnImpl):
                 softcap=softcap,
             )
         assert q.shape[0] == 1, "packed prefill uses batch dim 1"
-        out = ops.prefill_packed(
-            q[0], k[0], v[0], self._offsets, window=window, softcap=softcap,
-            max_seq_len=self._max_seq_len, impl=self._impl,
-        )
+        if self._dop > 1:
+            from repro.core.esp import ring_packed_prefill
+
+            out = ring_packed_prefill(
+                q[0], k[0], v[0], self._offsets, self._dop, window=window,
+                softcap=softcap, max_seq_len=self._max_seq_len,
+                impl=self._impl,
+            )
+        else:
+            out = ops.prefill_packed(
+                q[0], k[0], v[0], self._offsets, window=window,
+                softcap=softcap, max_seq_len=self._max_seq_len,
+                impl=self._impl,
+            )
         return out[None].astype(q.dtype)

@@ -62,3 +62,35 @@ def ring_pairs(n: int, group: int | None = None) -> list[Tuple[int, int]]:
         for i in range(g):
             pairs.append((base + i, base + (i + 1) % g))
     return pairs
+
+
+def ring_chunk_schedule(n: int, group: int | None = None) -> list[list[int]]:
+    """``sched[step][rank]`` — which rank's original KV chunk each rank holds
+    at every ring step, obtained by *simulating* the `ring_pairs` ppermute
+    schedule (every rank starts with its own chunk; each step forwards it to
+    the ring neighbour).  The packed-prefill ring driver replays this
+    schedule chunk-by-chunk so the single-process simulation runs exactly the
+    launches the SPMD ppermute ring would."""
+    g = group or n
+    pairs = ring_pairs(n, g)
+    held = list(range(n))
+    sched = [list(held)]
+    for _ in range(g - 1):
+        nxt = list(held)
+        for src, dst in pairs:
+            nxt[dst] = held[src]
+        held = nxt
+        sched.append(list(held))
+    return sched
+
+
+def shard_offsets(seq_offsets, n: int, shard: int):
+    """Per-shard segment offsets of a striped packed axis.
+
+    Global packed index ``g`` lives on shard ``g % n`` at local slot
+    ``g // n``; entry ``b`` of the result is the number of shard-local tokens
+    with global packed index < ``seq_offsets[b]`` — i.e. the boundaries of
+    request b's contiguous run inside the shard's local order.  Works on
+    numpy or traced jnp offsets."""
+    off = jnp.asarray(seq_offsets, jnp.int32)
+    return jnp.maximum((off - shard + n - 1) // n, 0).astype(jnp.int32)

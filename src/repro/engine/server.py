@@ -308,12 +308,16 @@ class LoongServeEngine(BaseServingEngine):
         # dependent (batching would change generated tokens).
         self._paged_impl = None
         # packed ragged prefill: one jitted model step per bucketed
-        # (total_tokens, batch, max_len) shape — O(log max_tokens) programs
-        # instead of one per distinct prompt length.  Same family gating as
-        # the paged decode path (moe: expert-capacity dropping is
-        # batch-size dependent, packing would change generated tokens).
+        # (total_tokens, batch, max_len, dop) shape — O(log max_tokens)
+        # programs per DoP instead of one per distinct prompt length.  DoP>1
+        # ESP groups run the SAME packed step with the token axis striped
+        # across the group and attention ring-fused (one packed chunk launch
+        # per instance per ring step) — no serial fallback for scaled-up
+        # groups.  Same family gating as the paged decode path (moe:
+        # expert-capacity dropping is batch-size dependent, packing would
+        # change generated tokens).
         self._packed_prefill_impl = None
-        self._prefill_programs: Dict[Tuple[int, int, int], Any] = {}
+        self._prefill_programs: Dict[Tuple[int, int, int, int], Any] = {}
         if self.real and self.cfg.family in ("dense", "vlm"):
             from repro.core.paged_decode import PagedDecodeAttnImpl
             from repro.core.paged_prefill import PackedPrefillAttnImpl
@@ -431,11 +435,25 @@ class LoongServeEngine(BaseServingEngine):
         # lost their reserved placement slots — drop them (the epoch stamp
         # also catches ones already relaunched and back in PREFILL phase).
         epoch = self._prefill_launch_epoch.pop(id(batch), None)
-        alive = [
-            r for r in batch.requests
-            if r.phase is Phase.PREFILL
-            and (epoch is None or epoch.get(r.rid) == r.n_evictions)
-        ]
+        alive = []
+        for r in batch.requests:
+            if r.phase is not Phase.PREFILL or (
+                epoch is not None and epoch.get(r.rid) != r.n_evictions
+            ):
+                continue
+            if self._placement_lost(batch, r):
+                # part of the reserved placement sits on a failed instance
+                # (normally _apply_failure already requeued the request; this
+                # catches the post-restore case where the epoch stamp was
+                # dropped): scattering would silently skip the dead shard and
+                # leave partial KV — requeue for recompute instead, mirroring
+                # decode_done's stamp check.
+                self.pool.free_request(r.rid)
+                self._requeue_for_recompute(r)
+                if r not in self.pending:
+                    self.pending.append(r)
+                continue
+            alive.append(r)
         if len(alive) < len(batch.requests):
             batch.requests = alive
             batch.instances = [i for i in batch.instances if i not in self.failed]
@@ -554,7 +572,36 @@ class LoongServeEngine(BaseServingEngine):
 
         return max(lo, _pad_bucket(n))
 
+    @classmethod
+    def _token_bucket(cls, n: int, lo: int = 16) -> int:
+        """Packed-token-axis bucket: powers of two plus their 3/4 points
+        (16, 24, 32, 48, 64, ...).  Still O(log max_tokens) compiled shapes
+        — 2x the constant — but worst-case padding waste drops from ~2x to
+        ~4/3 on the axis every attention launch scans."""
+        b = cls._bucket(n, lo)
+        mid = (b * 3) // 4
+        return mid if (n <= mid and mid >= lo) else b
+
     def _real_prefill(self, batch: PrefillBatch) -> None:
+        # fast-path guard: every instance holding a request's reserved
+        # placement must still be alive — scattering would silently skip the
+        # dead shard and leave partial KV on EITHER path, so such requests
+        # are pruned and requeued for recompute (normally _on_prefill_done
+        # already did this; the re-check covers direct callers) while the
+        # rest of the batch keeps packed speed.
+        lost = [r for r in batch.requests if self._placement_lost(batch, r)]
+        if lost:
+            batch.requests = [r for r in batch.requests if r not in lost]
+            batch.instances = [
+                i for i in batch.instances if i not in self.failed
+            ]
+            for r in lost:
+                self.pool.free_request(r.rid)
+                self._requeue_for_recompute(r)
+                if r not in self.pending:
+                    self.pending.append(r)
+            if not batch.requests:
+                return
         if self._packed_prefill_impl is not None and all(
             r.prompt is not None and len(r.prompt) == r.input_len
             for r in batch.requests
@@ -562,10 +609,18 @@ class LoongServeEngine(BaseServingEngine):
             return self._real_prefill_packed(batch)
         return self._real_prefill_serial(batch)
 
-    def _packed_prefill_step(self, tb: int, bb: int, max_len_b: int):
-        """Jitted packed prefill program for one bucket triple; cached so
-        the compile count stays O(log max_tokens)."""
-        key = (tb, bb, max_len_b)
+    def _placement_lost(self, batch: PrefillBatch, r: Request) -> bool:
+        """True when part of the request's reserved KV placement sits on a
+        failed instance — its prefill KV could only be scattered partially."""
+        return any(
+            pos_list and inst in self.failed
+            for inst, pos_list in batch.placement.get(r.rid, {}).items()
+        )
+
+    def _packed_prefill_step(self, tb: int, bb: int, max_len_b: int, dop: int):
+        """Jitted packed prefill program for one bucket tuple; cached so
+        the compile count stays O(log max_tokens) per DoP."""
+        key = (tb, bb, max_len_b, dop)
         fn = self._prefill_programs.get(key)
         if fn is None:
             import jax
@@ -573,7 +628,7 @@ class LoongServeEngine(BaseServingEngine):
             model, impl = self.model, self._packed_prefill_impl
 
             def step(params, tokens, positions, offsets, last_idx):
-                impl.begin_step(offsets, max_len_b)
+                impl.begin_step(offsets, max_len_b, dop=dop)
                 try:
                     return model.prefill_packed(
                         params, {"tokens": tokens[None]}, positions, last_idx
@@ -587,17 +642,22 @@ class LoongServeEngine(BaseServingEngine):
     def _real_prefill_packed(self, batch: PrefillBatch) -> None:
         """One packed model step for the WHOLE prefill batch: prompts are
         concatenated on a single (bucketed) token axis, attention is
-        segment-masked by one ragged kernel launch per layer, first tokens
-        are sampled from the packed logits, and the per-layer KV output is
-        scattered straight into paged device storage at the slots the
-        scheduler reserved (`pool.fill_packed` write-through — the decode
-        mirror never re-uploads prefill KV)."""
+        segment-masked by one ragged kernel launch per layer (DoP>1 groups:
+        one ring-chunk launch per instance per ring step over the striped
+        packed axis), first tokens are sampled from the packed logits, and
+        the per-layer KV output is scattered straight into paged device
+        storage at the slots the scheduler reserved (`pool.fill_packed`
+        write-through — the decode mirror never re-uploads prefill KV)."""
         import jax.numpy as jnp
 
         reqs = batch.requests
         lens = [len(r.prompt) for r in reqs]
         total = sum(lens)
-        tb = self._bucket(total)
+        # ring degree = the (alive) ESP group driving this batch; the token
+        # bucket is a bucketed SHARD length x dop so the striped shards stay
+        # block-aligned (dop=1 degenerates to plain token bucketing)
+        dop = max(len([i for i in batch.instances if i not in self.failed]), 1)
+        tb = self._token_bucket(-(-total // dop)) * dop
         bb = self._bucket(len(reqs), lo=1)
         max_len_b = self._bucket(max(lens))
         tokens = np.zeros(tb, np.int32)
@@ -613,7 +673,7 @@ class LoongServeEngine(BaseServingEngine):
             c += n
             offsets[b + 1] = c
             last_idx[b] = c - 1
-        fn = self._packed_prefill_step(tb, bb, max_len_b)
+        fn = self._packed_prefill_step(tb, bb, max_len_b, dop)
         prev_impl = self.model.attn_impl
         self.model.attn_impl = self._packed_prefill_impl
         try:
@@ -654,7 +714,12 @@ class LoongServeEngine(BaseServingEngine):
         """Per-request fallback (recurrent/hybrid state, moe capacity)."""
         import jax.numpy as jnp
 
+        from repro.kernels import ops
+
         for r in batch.requests:
+            # dispatch-counted so tests/benches can assert the packed paths
+            # (incl. DoP>1 ring fusion) never fall back to serial prefill
+            ops.dispatch_counts["prefill_serial_model"] += 1
             toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
             logits, cache = self.model.prefill(self.params, {"tokens": toks})
             r.output_tokens.append(self._sample_token(np.asarray(logits[0, -1])))

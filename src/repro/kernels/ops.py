@@ -31,6 +31,7 @@ from repro.kernels.paged_flash_decode import (
 )
 from repro.kernels.paged_flash_prefill import (
     packed_flash_prefill as _pfp_kernel,
+    packed_flash_prefill_ring_chunk as _pfp_ring_kernel,
 )
 from repro.kernels.striped_attention import striped_flash_attention as _sa_kernel
 from repro.models.attention import Partial
@@ -119,6 +120,46 @@ def prefill_packed(
     return _pfp_kernel(
         q, k, v, jnp.asarray(seq_offsets, jnp.int32), window=window,
         softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"),
+    )
+
+
+def prefill_ring_chunk(
+    q, k, v, q_offsets, k_offsets, carry=None, *,
+    q_shard: int, k_shard: int, n_shards: int,
+    window=None, softcap=None, max_seq_len=None,
+    impl: Optional[str] = None, block_q: int = 128, block_k: int = 128,
+):
+    """One ring step of the DoP>1 ESP packed prefill: fold one striped KV
+    chunk into the carried unnormalized (o, m, l) flash state with a single
+    ragged launch (see kernels/paged_flash_prefill.py — ring fusion).
+
+    ``q_offsets``/``k_offsets`` are the per-shard recomputed segment offsets
+    (`striped.shard_offsets`) the kernel/banded fallback derive segment ids
+    from; causal/window masks evaluate on global striped positions.
+    ``carry=None`` starts an empty state (m=-inf).  Finalize after the last
+    step with ``o / l`` (l==0 rows are bucket padding)."""
+    impl = impl or _DEFAULT_IMPL
+    dispatch_counts["prefill_ring_chunk"] += 1
+    if carry is None:
+        tl, h = q.shape[0], q.shape[1]
+        carry = (
+            jnp.zeros((tl, h, q.shape[2]), jnp.float32),
+            jnp.full((tl, h), -jnp.inf, jnp.float32),
+            jnp.zeros((tl, h), jnp.float32),
+        )
+    if impl == "xla":
+        return ref.packed_prefill_ring_chunk_banded(
+            q, k, v, q_offsets, k_offsets, carry,
+            q_shard=q_shard, k_shard=k_shard, n_shards=n_shards,
+            window=window, softcap=softcap, block_q=block_q,
+            max_seq_len=max_seq_len,
+        )
+    return _pfp_ring_kernel(
+        q, k, v, jnp.asarray(q_offsets, jnp.int32),
+        jnp.asarray(k_offsets, jnp.int32), carry,
+        q_shard=q_shard, k_shard=k_shard, n_shards=n_shards,
+        window=window, softcap=softcap, block_q=block_q, block_k=block_k,
         interpret=(impl == "interpret"),
     )
 

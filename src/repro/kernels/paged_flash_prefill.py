@@ -25,7 +25,23 @@ Contract:
     kernel, so the striped/packed layout stays transparent to the model.
 
 Emits the NORMALIZED output (prefill is local to the packed batch — no
-cross-instance combine is needed; the ESP ring path keeps its own kernel).
+cross-instance combine is needed).
+
+Ring fusion (DoP>1 ESP prefill)
+-------------------------------
+``packed_flash_prefill_ring_chunk`` is the online-softmax accumulator variant
+of the same kernel for the striped ESP ring: the packed token axis is striped
+across the n instances of an elastic group (global packed index ``g`` lives
+on shard ``g % n`` at local slot ``g // n``), and at every ring step each
+instance runs ONE launch of this kernel over (its local query shard) x (the
+remote KV chunk it currently holds), carrying the unnormalized
+``(acc, m, l)`` flash state across steps.  Segment ids come from
+scalar-prefetched PER-SHARD offsets (``striped.shard_offsets``), while the
+causal/window predicates are evaluated on GLOBAL striped positions
+reconstructed as ``j * n + shard`` — so tile skipping still works: a q/k tile
+pair is skipped when its global causal reach, segment ranges, or window reach
+cannot interact.  After n steps the carried state finalizes to exactly the
+single-launch packed result (same math, chunked).
 """
 from __future__ import annotations
 
@@ -146,7 +162,11 @@ def packed_flash_prefill(
     q_per_kv = h // kvh
     block_q = min(block_q, t)
     block_k = min(block_k, t)
-    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    while t % block_q:  # 3/4-point buckets (e.g. 3*2^j): halve to a divisor
+        block_q //= 2
+    while t % block_k:
+        block_k //= 2
+    assert block_q >= 1 and block_k >= 1, (t, block_q, block_k)
     n_seqs = int(seq_offsets.shape[0]) - 1
     nq, nk = t // block_q, t // block_k
     scale = 1.0 / math.sqrt(d)
@@ -181,3 +201,189 @@ def packed_flash_prefill(
         out_shape=jax.ShapeDtypeStruct((t, h, d), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(seq_offsets, jnp.int32), q, k, v)
+
+
+# ===================================================== ring-fused chunk step
+
+
+def _ring_kernel(
+    qoff_ref, koff_ref, q_ref, k_ref, v_ref, o_in_ref, m_in_ref, l_in_ref,
+    o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref, *,
+    scale: float,
+    window: Optional[int],
+    softcap: Optional[float],
+    q_shard: int,
+    k_shard: int,
+    n_shards: int,
+    block_q: int,
+    block_k: int,
+    n_seqs: int,
+    n_k_blocks: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    n = n_shards
+
+    @pl.when(ik == 0)
+    def _init():  # resume the carried flash state (m=-inf empty on step 0)
+        acc_ref[...] = o_in_ref[...].reshape(acc_ref.shape)
+        m_ref[:, 0] = m_in_ref[...].reshape(-1)
+        l_ref[:, 0] = l_in_ref[...].reshape(-1)
+
+    # local (shard) token indices of this tile pair
+    jq = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    jk = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    # global striped positions: shard r's local slot j is packed index j*n+r
+    gq = jq * n + q_shard
+    gk = jk * n + k_shard
+
+    def seg_ids(j, off_ref):
+        """Segment id per LOCAL index from the per-shard offsets."""
+
+        def body(b, acc):
+            return acc + jnp.where(j >= off_ref[b + 1], 1, 0)
+
+        return jax.lax.fori_loop(0, n_seqs, body, jnp.zeros_like(j))
+
+    seg_q = seg_ids(jq, qoff_ref)  # [block_q, 1]
+    seg_k = seg_ids(jk, koff_ref)  # [1, block_k]
+
+    # tile-level skip in GLOBAL coordinates: causal reach, segment-range
+    # overlap (per-shard seg ids stay monotone in the local index), window
+    run = (ik * block_k) * n + k_shard <= (iq * block_q + block_q - 1) * n + q_shard
+    run &= (seg_k[0, 0] <= seg_q[block_q - 1, 0]) & (
+        seg_q[0, 0] <= seg_k[0, block_k - 1]
+    )
+    if window is not None:
+        run &= (
+            (iq * block_q) * n + q_shard
+            - ((ik * block_k + block_k - 1) * n + k_shard)
+        ) < window
+
+    @pl.when(run)
+    def _update():
+        qpk = q_ref.shape[1]
+        qb = q_ref[...].astype(jnp.float32).reshape(block_q * qpk, -1)
+        kb = k_ref[:, 0, :].astype(jnp.float32)  # [block_k, D]
+        vb = v_ref[:, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [block_q * qpk, block_k]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = (seg_q == seg_k) & (gq >= gk)
+        if window is not None:
+            mask &= (gq - gk) < window
+        mask = jnp.broadcast_to(
+            mask[:, None, :], (block_q, qpk, block_k)
+        ).reshape(block_q * qpk, block_k)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_blk = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        m_safe = jnp.maximum(m_new, -1e29)  # fully-masked-row guard
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, vb, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[:, 0] = jnp.where(m_blk <= NEG_INF / 2, m_prev, m_new)
+        l_ref[:, 0] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _emit():  # UNNORMALIZED: the carried state continues to the next step
+        o_ref[...] = acc_ref[...].reshape(o_ref.shape)
+        m_out_ref[...] = m_ref[:, 0].reshape(m_out_ref.shape)
+        l_out_ref[...] = l_ref[:, 0].reshape(l_out_ref.shape)
+
+
+def packed_flash_prefill_ring_chunk(
+    q: jnp.ndarray,  # [Tl, H, D] striped local query shard (shard q_shard)
+    k: jnp.ndarray,  # [Tl, KVH, D] the KV chunk held this ring step
+    v: jnp.ndarray,
+    q_offsets: jnp.ndarray,  # [B+1] int32 per-shard offsets of the q shard
+    k_offsets: jnp.ndarray,  # [B+1] int32 per-shard offsets of the KV chunk
+    carry,  # (o [Tl,H,D], m [Tl,H], l [Tl,H]) f32 flash state, NEG_INF-empty
+    *,
+    q_shard: int,
+    k_shard: int,
+    n_shards: int,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """One ring step: fold one striped KV chunk into the carried flash state
+    with a single ragged launch.  Returns the updated (o, m, l) — finalize
+    with ``o / l`` after the last step (empty rows keep m=-inf, l=0)."""
+    tl, h, d = q.shape
+    kvh = k.shape[1]
+    q_per_kv = h // kvh
+    block_q = min(block_q, tl)
+    block_k = min(block_k, tl)
+    while tl % block_q:  # 3/4-point buckets (e.g. 3*2^j): halve to a divisor
+        block_q //= 2
+    while tl % block_k:
+        block_k //= 2
+    assert block_q >= 1 and block_k >= 1, (tl, block_q, block_k)
+    n_seqs = int(q_offsets.shape[0]) - 1
+    nq, nk = tl // block_q, tl // block_k
+    scale = 1.0 / math.sqrt(d)
+    o_c, m_c, l_c = carry
+
+    kernel = functools.partial(
+        _ring_kernel, scale=scale, window=window, softcap=softcap,
+        q_shard=q_shard, k_shard=k_shard, n_shards=n_shards,
+        block_q=block_q, block_k=block_k, n_seqs=n_seqs, n_k_blocks=nk,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # q_offsets, k_offsets
+        grid=(kvh, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (block_q, q_per_kv, d), lambda g, iq, ik, qo, ko: (iq, g, 0)
+            ),
+            pl.BlockSpec((block_k, 1, d), lambda g, iq, ik, qo, ko: (ik, g, 0)),
+            pl.BlockSpec((block_k, 1, d), lambda g, iq, ik, qo, ko: (ik, g, 0)),
+            # carried flash state, blocked like q / its per-head stats
+            pl.BlockSpec(
+                (block_q, q_per_kv, d), lambda g, iq, ik, qo, ko: (iq, g, 0)
+            ),
+            pl.BlockSpec((block_q, q_per_kv), lambda g, iq, ik, qo, ko: (iq, g)),
+            pl.BlockSpec((block_q, q_per_kv), lambda g, iq, ik, qo, ko: (iq, g)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (block_q, q_per_kv, d), lambda g, iq, ik, qo, ko: (iq, g, 0)
+            ),
+            pl.BlockSpec((block_q, q_per_kv), lambda g, iq, ik, qo, ko: (iq, g)),
+            pl.BlockSpec((block_q, q_per_kv), lambda g, iq, ik, qo, ko: (iq, g)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q * q_per_kv, d), jnp.float32),
+            pltpu.VMEM((block_q * q_per_kv, 1), jnp.float32),
+            pltpu.VMEM((block_q * q_per_kv, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((tl, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((tl, h), jnp.float32),
+            jax.ShapeDtypeStruct((tl, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        jnp.asarray(q_offsets, jnp.int32), jnp.asarray(k_offsets, jnp.int32),
+        q, k, v,
+        jnp.asarray(o_c, jnp.float32), jnp.asarray(m_c, jnp.float32),
+        jnp.asarray(l_c, jnp.float32),
+    )

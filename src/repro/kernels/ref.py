@@ -107,6 +107,112 @@ def packed_prefill_banded(
     return outs.reshape(t, h, d)
 
 
+def _ring_chunk_mask(
+    tl: int, q_shard, k_shard, n_shards: int, seq_offsets, *, window=None
+):
+    """[Tl, Tl] mask for one striped ring chunk: shard r's local slot j is
+    global packed index ``j * n + r``; segment ids derive from the per-shard
+    offsets, causal/window from the global striped positions."""
+    j = jnp.arange(tl, dtype=jnp.int32)
+    gq = j * n_shards + q_shard
+    gk = j * n_shards + k_shard
+    off = jnp.asarray(seq_offsets, jnp.int32)
+    seg_q = jnp.sum(gq[:, None] >= off[None, 1:], axis=1)
+    seg_k = jnp.sum(gk[:, None] >= off[None, 1:], axis=1)
+    mask = (seg_q[:, None] == seg_k[None, :]) & (gq[:, None] >= gk[None, :])
+    if window is not None:
+        mask &= (gq[:, None] - gk[None, :]) < window
+    return mask
+
+
+def packed_prefill_ring_chunk_ref(
+    q, k, v, seq_offsets, carry, *, q_shard, k_shard, n_shards,
+    window=None, softcap=None,
+):
+    """Dense oracle for one ring step (tests only: O(Tl^2) scores): fold one
+    striped KV chunk into the carried unnormalized (o, m, l) flash state.
+    ``seq_offsets`` are the GLOBAL packed offsets; positions are global
+    striped (``j * n + shard``).  Finalize with ``o / l`` after the last
+    step."""
+    tl = q.shape[0]
+    mask = _ring_chunk_mask(
+        tl, q_shard, k_shard, n_shards, seq_offsets, window=window
+    )
+    part = A.partial_attention(
+        q[None], k[None], v[None], mask[None], softcap=softcap
+    )
+    o, m, l = A.merge_partial(
+        A.Partial(carry[0][None], carry[1][None], carry[2][None]), part
+    )
+    return o[0], m[0], l[0]
+
+
+def packed_prefill_ring_chunk_banded(
+    q, k, v, q_offsets, k_offsets, carry, *, q_shard, k_shard, n_shards,
+    window=None, softcap=None, block_q=128, max_seq_len=None,
+):
+    """Production XLA fallback for one ring step of the striped packed
+    prefill (the chunked analogue of `packed_prefill_banded`).
+
+    Scans over local q blocks; each block attends a banded window of the KV
+    chunk guaranteed to cover its segments' global reach — a segment spans at
+    most ``max_seq_len`` GLOBAL positions, i.e. ``ceil(max_seq_len / n)``
+    local slots of any one shard (less under sliding window) — with the
+    per-shard segment mask killing cross-request pairs inside the band.
+    ``q_offsets``/``k_offsets`` are the per-shard offsets
+    (`striped.shard_offsets`); global positions rebuild as ``j * n + shard``.
+    Returns the updated unnormalized (o, m, l) carry."""
+    tl, h, d = q.shape
+    n = n_shards
+    blk = min(block_q, tl)
+    while tl % blk:  # defensive: engine buckets the shard length
+        blk //= 2
+    nb = tl // blk
+    reach_g = None if max_seq_len is None else int(max_seq_len)
+    if window is not None:
+        reach_g = window if reach_g is None else min(reach_g, window)
+    # local band reach: global reach divided across the n stripes (+1 slack
+    # for shard phase rounding)
+    reach_l = tl if reach_g is None else min(-(-reach_g // n) + 1, tl)
+    w = min(-(-max(reach_l - 1, 0) // blk) + 1, nb)  # band width in blocks
+    j = jnp.arange(tl, dtype=jnp.int32)
+    gq = j * n + q_shard
+    gk = j * n + k_shard
+    qo = jnp.asarray(q_offsets, jnp.int32)
+    ko = jnp.asarray(k_offsets, jnp.int32)
+    seg_q = jnp.sum(j[:, None] >= qo[None, 1:], axis=1)
+    seg_k = jnp.sum(j[:, None] >= ko[None, 1:], axis=1)
+    pad = (w - 1) * blk
+    kp = jnp.pad(k, ((pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((pad, 0), (0, 0), (0, 0)))
+    segkp = jnp.pad(seg_k, (pad, 0), constant_values=-1)  # pad never matches
+    gkp = jnp.pad(gk, (pad, 0), constant_values=-1)
+
+    def body(_, i):
+        s0 = i * blk  # band [s0, s0 + w*blk) of the padded local axis
+        qb = jax.lax.dynamic_slice_in_dim(q, s0, blk)
+        gqb = jax.lax.dynamic_slice_in_dim(gq, s0, blk)
+        sqb = jax.lax.dynamic_slice_in_dim(seg_q, s0, blk)
+        kb = jax.lax.dynamic_slice_in_dim(kp, s0, w * blk)
+        vb = jax.lax.dynamic_slice_in_dim(vp, s0, w * blk)
+        gkb = jax.lax.dynamic_slice_in_dim(gkp, s0, w * blk)
+        skb = jax.lax.dynamic_slice_in_dim(segkp, s0, w * blk)
+        mask = (sqb[:, None] == skb[None, :]) & (gqb[:, None] >= gkb[None, :])
+        if window is not None:
+            mask &= (gqb[:, None] - gkb[None, :]) < window
+        part = A.partial_attention(
+            qb[None], kb[None], vb[None], mask[None], softcap=softcap
+        )
+        return None, (part.o[0], part.m[0], part.l[0])
+
+    _, (o_b, m_b, l_b) = jax.lax.scan(body, None, jnp.arange(nb))
+    part = A.Partial(
+        o_b.reshape(tl, h, d), m_b.reshape(tl, h), l_b.reshape(tl, h)
+    )
+    o, m, l = A.merge_partial(A.Partial(*carry), part)
+    return o, m, l
+
+
 def paged_flash_decode_partial_ref(
     q,  # [B, 1, H, D]
     k_pages,  # [n_pages, P, KVH, D]

@@ -36,10 +36,27 @@ slots dirty; the next ``device_kv()`` call uploads only those slots (or does
 one full resync after load/failure).  ``fill_packed`` is the write-through
 fast path for packed prefill: the KV is already device-resident (produced by
 the packed prefill step), so it is scattered straight into the mirror
-device-to-device and the host copy is updated WITHOUT dirtying — the next
-decode's mirror sync uploads nothing for those slots.  The
+device-to-device and the slots are marked STALE on the host instead of being
+downloaded — the prefill critical path stays device-only.  The host
+management copy lazily resyncs FROM the mirror only when a management
+operation actually reads it (``gather`` for migration/debug, SWA compaction,
+checkpointing); ``host_syncs`` counts those forced downloads and the
 ``mirror_full_syncs``/``mirror_uploaded_slots`` counters let tests and
-benchmarks assert that invariant.
+benchmarks assert the zero-re-upload invariant.
+
+Ring-step KV ownership (DoP>1 ESP prefill)
+------------------------------------------
+Under the fused striped ring, the packed token axis of a prefill batch is
+striped across the group's instances (global packed column ``g`` belongs to
+instance ``g % n``); each ring step circulates the KV *chunks* between
+instances, but ownership never moves: every instance write-throughs exactly
+the packed columns of its own reserved placement (``batch.placement``) via
+``fill_packed``, the same columns its stripe produced.  Proactive ESP
+scale-down therefore stays zero-copy — the scheduler reserves the shrunken
+group's slots BEFORE the ring runs, the ring pass deposits each column at
+its final home as a side effect of computation, and no post-hoc migration of
+the dropped instances' shards is ever needed (their columns were simply
+never assigned to them).
 """
 from __future__ import annotations
 
@@ -158,6 +175,12 @@ class KVPool:
         self._mirror = None  # (k_dev, v_dev, slot_pos_dev) jax arrays
         self.mirror_full_syncs = 0
         self.mirror_uploaded_slots = 0
+        # lazy host copy: slots whose authoritative KV lives only in the
+        # mirror (landed via `fill_packed`); synced down on demand by the
+        # management plane (gather / SWA compaction / checkpoint)
+        self._stale_host = np.zeros(self.capacity, bool)
+        self._stale_count = 0
+        self.host_syncs = 0
 
     # ------------------------------------------------------------- accounting
     @property
@@ -267,6 +290,7 @@ class KVPool:
         n_drop = int(drop.sum())
         if n_drop == 0:
             return 0
+        self._sync_host()  # compaction moves host KV between slots
         old_slots = self.slots_of_state(st)
         keep_slots = old_slots[~drop]
         keep_pos = st.pos[: st.n_tok][~drop]
@@ -306,6 +330,42 @@ class KVPool:
             self._dirty.clear()
             self._dirty_count = 0
 
+    def _mark_stale_host(self, slots: np.ndarray) -> None:
+        if len(slots):  # count updates are O(len(slots)), not O(capacity)
+            self._stale_count += len(slots) - int(
+                np.count_nonzero(self._stale_host[slots])
+            )
+            self._stale_host[slots] = True
+
+    def _clear_stale_host(self, slots: np.ndarray) -> None:
+        """Host-side writes (`write`/`fill`) make the host authoritative for
+        their slots again (reused pages may carry a stale flag from a freed
+        request) — drop the flag WITHOUT downloading."""
+        if self._stale_count and len(slots):
+            self._stale_count -= int(np.count_nonzero(self._stale_host[slots]))
+            self._stale_host[slots] = False
+
+    def stale_host_slot_count(self) -> int:
+        """Slots whose host copy is behind the device mirror (the probe for
+        the lazy-host-copy invariant: >0 right after a packed prefill, 0
+        after any management-plane read forced a sync)."""
+        return self._stale_count
+
+    def _sync_host(self) -> None:
+        """On-demand download of stale slots from the mirror to the host
+        management copy (migration / gather / SWA compaction / checkpoints
+        read it).  Off the prefill critical path by construction."""
+        if self._stale_count == 0:
+            return
+        slots = np.nonzero(self._stale_host)[0]
+        if self._mirror is not None:
+            kd, vd, _ = self._mirror
+            self.k[:, slots] = np.asarray(kd[:, slots], np.float32)
+            self.v[:, slots] = np.asarray(vd[:, slots], np.float32)
+            self.host_syncs += 1
+        self._stale_host[:] = False
+        self._stale_count = 0
+
     def dirty_slot_count(self) -> int:
         """Slots the next `device_kv()` sync would upload (capacity if a
         full resync is pending) — the public probe for the write-through
@@ -331,6 +391,7 @@ class KVPool:
         """k/v: [n_attn, n_tokens, KVH, D] for `positions` (allocates)."""
         slots = np.asarray(self.alloc(request_id, positions), np.int64)
         if self.store_values:
+            self._clear_stale_host(slots)
             self.k[:, slots] = np.asarray(k, np.float32)
             self.v[:, slots] = np.asarray(v, np.float32)
             self._mark_dirty(slots)
@@ -359,6 +420,7 @@ class KVPool:
         slots = self.slots_for(request_id, positions)
         if len(slots) == 0:
             return
+        self._clear_stale_host(slots)
         self.k[:, slots] = np.asarray(k, np.float32)
         self.v[:, slots] = np.asarray(v, np.float32)
         self._mark_dirty(slots)
@@ -376,6 +438,10 @@ class KVPool:
         full, dirty = self.consume_dirty()
         cur = self._mirror
         if cur is None or full:
+            # a full resync uploads the HOST copy wholesale: pull any
+            # stale-host slots (authoritative only in the mirror) down first
+            # or their KV would be overwritten with never-synced host data
+            self._sync_host()
             cur = (jnp.asarray(self.k), jnp.asarray(self.v),
                    jnp.asarray(self.slot_pos))
             self.mirror_full_syncs += 1
@@ -395,18 +461,25 @@ class KVPool:
 
     def drop_mirror(self) -> None:
         """Invalidate the device mirror (instance failure / state restore);
-        the next `device_kv()` rebuilds it with one full upload."""
+        the next `device_kv()` rebuilds it with one full upload.  Pending
+        stale-host slots are dropped with it: both callers (failure, restore)
+        discard the stored KV values anyway."""
         self._mirror = None
         self._dirty_full = True
         self._dirty = []
         self._dirty_count = 0
+        self._stale_host[:] = False
+        self._stale_count = 0
 
     def fill_packed(self, slots: np.ndarray, k_dev, v_dev) -> None:
         """Device-side write-through fill: scatter DEVICE-RESIDENT KV (e.g.
         the packed prefill step's per-layer output) straight into the mirror
-        at `slots` (block-table rows), then update the host management copy
-        WITHOUT dirtying — the next `device_kv()` sync uploads nothing for
-        these slots.  `k_dev`/`v_dev`: [n_attn, len(slots), KVH, D]."""
+        at `slots` (block-table rows) WITHOUT dirtying — the next
+        `device_kv()` sync uploads nothing for these slots — and WITHOUT
+        downloading to the host: the slots are marked stale and the host
+        management copy pulls them from the mirror on demand (`_sync_host`),
+        keeping the prefill critical path device-only.
+        `k_dev`/`v_dev`: [n_attn, len(slots), KVH, D]."""
         if not self.store_values:
             return
         import jax.numpy as jnp
@@ -427,9 +500,9 @@ class KVPool:
             kd, vd, pd, jnp.asarray(idx), kn, vn,
             jnp.asarray(self.slot_pos[idx]),
         )
-        # host management copy (migration / gather / SWA compaction read it)
-        self.k[:, slots] = np.asarray(k_dev, np.float32)
-        self.v[:, slots] = np.asarray(v_dev, np.float32)
+        # lazy host copy: defer the device->host download to the first
+        # management-plane read (migration / gather / SWA / checkpoint)
+        self._mark_stale_host(slots)
 
     def gather(self, request_id: int) -> Tuple[np.ndarray, Optional[np.ndarray], Optional[np.ndarray]]:
         """Returns (positions sorted, k, v) for this instance's share.
@@ -444,6 +517,7 @@ class KVPool:
         positions = pos[order]
         if not self.store_values:
             return positions, None, None
+        self._sync_host()
         if len(positions) == 0:
             empty = np.zeros((self.n_attn, 0) + self.k.shape[2:], np.float32)
             return positions, empty, empty.copy()
@@ -471,11 +545,13 @@ class KVPool:
     @property
     def k_pages(self) -> np.ndarray:
         """[n_attn, n_pages, page_size, KVH, D] view of the K storage."""
+        self._sync_host()
         return self.k.reshape(self.n_attn, self.n_pages, self.page_size,
                               *self.k.shape[2:])
 
     @property
     def v_pages(self) -> np.ndarray:
+        self._sync_host()
         return self.v.reshape(self.n_attn, self.n_pages, self.page_size,
                               *self.v.shape[2:])
 
@@ -486,6 +562,8 @@ class KVPool:
 
     # ------------------------------------------------------- checkpointing
     def state_dict(self) -> Dict[str, object]:
+        if self.store_values:
+            self._sync_host()  # checkpoints snapshot the host copy
         return {
             "free_pages": self._free_pages.copy(),
             "n_free_pages": self._n_free_pages,

@@ -156,10 +156,11 @@ def _prefill_batch(eng, rng, lengths, rid0=0):
 
 
 def test_fill_packed_write_through_zero_reupload():
-    """After a packed prefill, the pools' host copies hold the KV (gather /
-    migration correctness), NO slot is dirty, and the first decode-style
+    """After a packed prefill NO slot is dirty and the first decode-style
     mirror sync uploads ZERO slots — the write-through already updated the
-    device mirror in place."""
+    device mirror in place.  The host management copy is LAZY: the prefill
+    critical path downloads nothing (slots stale, host_syncs == 0); the
+    first management-plane read (gather) pulls them from the mirror once."""
     model = build_model(CFG)
     params = model.init(jax.random.PRNGKey(0))
     eng = LoongServeEngine(CFG, 2, 1024, store_values=True, model=model,
@@ -170,20 +171,27 @@ def test_fill_packed_write_through_zero_reupload():
     for pool in eng.pool.pools:
         # dirty-tracking counters: nothing pending for the next sync
         assert pool.dirty_slot_count() == 0
+        # lazy host copy: the critical path downloaded nothing
+        assert pool.stale_host_slot_count() > 0
+        assert pool.host_syncs == 0
         uploads_before = pool.mirror_uploaded_slots
         fulls_before = pool.mirror_full_syncs
         kd, vd, pd = pool.device_kv()  # first decode iteration's sync
         assert pool.mirror_uploaded_slots == uploads_before
         assert pool.mirror_full_syncs == fulls_before
-        # the mirror and the host management copy agree
-        np.testing.assert_allclose(np.asarray(kd), pool.k, atol=1e-6)
-        np.testing.assert_allclose(np.asarray(vd), pool.v, atol=1e-6)
         np.testing.assert_array_equal(np.asarray(pd), pool.slot_pos)
-    # host copy actually contains each request's prefill KV (gather path)
+    # host copy materializes each request's prefill KV on demand (gather)
     for r in batch.requests:
         pos, k, _ = eng.pool.gather_request(r.rid)
         assert len(pos) == r.input_len
         assert float(np.abs(k).sum()) > 0.0
+    for pool in eng.pool.pools:
+        assert pool.host_syncs == 1  # one forced sync, then clean
+        assert pool.stale_host_slot_count() == 0
+        kd, vd, pd = pool.device_kv()
+        # the mirror and the (now synced) host management copy agree
+        np.testing.assert_allclose(np.asarray(kd), pool.k, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(vd), pool.v, atol=1e-6)
 
 
 def test_engine_end_to_end_packed_prefill_matches_oracle():
