@@ -1,6 +1,16 @@
+"""Dry-run hill-climb sweep over sharding/kernel variants (roofline census).
+
+Folded into benchmarks/ from the root-level run_hillclimb*.py exploration
+scripts (this is the latest sweep; the earlier two were supersets it
+re-measures).  Usage:
+
+  PYTHONPATH=src python -m benchmarks.hillclimb   # writes dryrun_hillclimb3.json
+"""
 import json
-from repro.launch.dryrun import run_cell
+
 from repro.launch import sharding as shlib
+from repro.launch.dryrun import run_cell
+
 results = []
 # Cell A: glm4 prefill (baseline chunkless; paper-faithful + variants)
 results.append(run_cell("glm4-9b", "prefill_32k", options={"kernel_adjusted": True}))

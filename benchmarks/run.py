@@ -671,6 +671,42 @@ def bench_prefill_ring(quick: bool = False):
     )
 
 
+# ------------------------------------------------- SPMD mesh-executor ring
+
+
+def bench_prefill_spmd(quick: bool = False):
+    """Mesh-executor ring prefill on an 8-virtual-device host mesh: the
+    DoP>1 packed prefill as ONE shard_map program with the KV stripes
+    ppermuted between devices — double-buffered vs sequential ring vs the
+    in-process LocalExecutor replay, plus exact per-ring-step ppermute
+    bytes.  Runs in a subprocess because the device-count XLA flag must be
+    set before jax initializes.  Writes BENCH_prefill_spmd.json."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).parent.parent
+    # the child module self-appends the 8-device XLA flag before jax
+    # initializes; only PYTHONPATH needs to be threaded through here
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    cmd = [sys.executable, "-m", "benchmarks.prefill_spmd"]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, env=env, cwd=root, capture_output=True,
+                         text=True, timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(out.stdout + "\n" + out.stderr)
+    row = next(
+        ln for ln in out.stdout.splitlines() if ln.startswith("prefill_spmd,")
+    )
+    _, us, derived = row.split(",", 2)
+    _row("prefill_spmd", float(us), derived)
+
+
 # -------------------------------------------------------------- roofline
 
 
@@ -717,12 +753,13 @@ BENCHES = {
     "decode": bench_decode_paged,
     "prefill": bench_prefill_packed,
     "prefill_ring": bench_prefill_ring,
+    "prefill_spmd": bench_prefill_spmd,
     "roofline": bench_roofline_summary,
 }
 
 # CI smoke: the engine hot paths (quick mode, *_quick.json artifacts);
 # failures are fatal so the benchmark paths can't silently rot.
-SMOKE = ("decode", "prefill", "prefill_ring")
+SMOKE = ("decode", "prefill", "prefill_ring", "prefill_spmd")
 
 
 def main() -> None:

@@ -1,5 +1,9 @@
-"""ESP SPMD demo: the striped ring prefill + multi-master decode running as
-real shard_map programs on 8 host devices, validated against the dense oracle.
+"""ESP SPMD demo: the serving engine running through the MESH EXECUTOR on 8
+host devices — the DoP>1 packed ring prefill as a real shard_map program
+(each elastic instance physically owns its KV stripe on its own device,
+stripes rotating via ppermute, double-buffered against chunk compute),
+followed by multi-master paged decode over the per-device pool mirrors —
+validated token-for-token against the serial dense oracle.
 
   PYTHONPATH=src python examples/esp_spmd_demo.py
 (sets XLA_FLAGS itself — run as a fresh process)
@@ -12,55 +16,76 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import REGISTRY, reduced
-from repro.core import striped
-from repro.core.esp import ESPAttnImpl
-from repro.models import attention as A
-from repro.models.transformer import DefaultAttnImpl
+from repro.engine.request import Phase, Request
+from repro.engine.server import LoongServeEngine
+from repro.kernels import ops
+from repro.launch.mesh import make_test_mesh
+from repro.manager.scheduler import PrefillBatch
+from repro.models import build_model
+
+DOP = 4
+N_DECODE = 3
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
-    cfg = reduced(REGISTRY["glm4-9b"], n_kv_heads=2, n_heads=4, d_head=16)
-    impl = ESPAttnImpl(mesh, cfg)
-    B, S, H, KVH, D = 2, 64, 4, 2, 16
-    key = jax.random.PRNGKey(0)
-    q = jax.random.normal(key, (B, S, H, D))
-    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KVH, D))
-    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KVH, D))
+    cfg = reduced(REGISTRY["lwm-7b"])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_test_mesh(data=DOP, model=8 // DOP)
+    eng = LoongServeEngine(cfg, DOP, 4000, store_values=True, model=model,
+                           params=params, page_size=16, mesh=mesh)
+    print(f"executor: {type(eng.executor).__name__} on mesh "
+          f"{dict(mesh.shape)}; per-instance mirror devices: "
+          f"{[str(p.device) for p in eng.pool.pools]}")
 
-    # --- striped ring prefill ---
-    ref = A.full_attention(q, k, v, causal=True)
-    n = 4
-    pos = striped.striped_positions(S, n)
-    with mesh:
-        out = jax.jit(
-            lambda q, k, v: impl.prefill_attn(
-                q, k, v, pos, pos, causal=True, window=None, softcap=None
-            )
-        )(striped.stripe(q, n), striped.stripe(k, n), striped.stripe(v, n))
-    err = float(jnp.max(jnp.abs(striped.unstripe(out, n) - ref)))
-    print(f"striped ring prefill vs dense oracle: max err {err:.2e}")
+    # one DoP=4 ESP prefill batch with scheduler-reserved striped placement
+    rng = np.random.default_rng(23)
+    reqs, placement = [], {}
+    for j, ln in enumerate([65, 17, 120, 48, 33, 80]):
+        r = Request(input_len=ln, max_new_tokens=N_DECODE + 1,
+                    prompt=rng.integers(0, cfg.vocab_size, ln).tolist())
+        r.rid, r.phase = j, Phase.PREFILL
+        plan = eng.pool.plan_placement(r.rid, list(range(ln)), range(DOP))
+        eng.pool.place(plan)  # reserve slots; the ring pass fills the values
+        placement[r.rid] = plan.assignment
+        reqs.append(r)
+    batch = PrefillBatch(reqs, list(range(DOP)),
+                         scale_down_to=list(range(DOP)), placement=placement)
+    for pool in eng.pool.pools:  # pre-create mirrors to expose the invariant
+        pool.device_kv()
+        pool.mirror_uploaded_slots = 0
 
-    # --- multi-master decode ---
-    Bd, Sc = 8, 128
-    qd = jax.random.normal(key, (Bd, 1, H, D))
-    kc = jax.random.normal(jax.random.PRNGKey(3), (Bd, Sc, KVH, D))
-    vc = jax.random.normal(jax.random.PRNGKey(4), (Bd, Sc, KVH, D))
-    kn = jax.random.normal(jax.random.PRNGKey(5), (Bd, 1, KVH, D))
-    vn = jax.random.normal(jax.random.PRNGKey(6), (Bd, 1, KVH, D))
-    lens = jnp.arange(1, Bd + 1, dtype=jnp.int32) * 13 % Sc
-    refd = DefaultAttnImpl().decode_attn(qd, kc, vc, kn, vn, lens,
-                                         window=None, softcap=None)
-    with mesh:
-        outd = jax.jit(
-            lambda *a: impl.decode_attn(*a, window=None, softcap=None)
-        )(qd, kc, vc, kn, vn, lens)
-    errd = float(jnp.max(jnp.abs(outd - refd)))
-    print(f"multi-master decode vs oracle:        max err {errd:.2e}")
-    assert err < 1e-5 and errd < 1e-5
+    ops.reset_dispatch_counts()
+    eng._on_prefill_done(batch)  # shard_map ring prefill + decode transition
+    d = dict(ops.dispatch_counts)
+    assert d.get("prefill_serial_model", 0) == 0, d
+    assert d.get("prefill_ring_replay", 0) == 0, d
+    assert d.get("prefill_ring_spmd", 0) >= 1, d
+    legs = d.get("ring_ppermute", 0)
+    print(f"ring prefill: {d.get('prefill_ring_chunk', 0)} chunk folds, "
+          f"{legs} ppermute legs/trace, "
+          f"{ops.comm_bytes.get('ring_ppermute', 0) // max(legs, 1)} "
+          f"bytes/leg; zero serial + zero in-process replay")
+    uploads = sum(p.mirror_uploaded_slots for p in eng.pool.pools)
+    assert uploads == 0, uploads
+    print("write-through: 0 mirror slots re-uploaded (KV landed on each "
+          "instance's own device during the ring pass)")
+
+    eng._push(eng.clock, "join", 0)  # kick the scheduler; decode to finish
+    m = eng.run()
+    assert len(m.finished) == len(reqs)
+
+    # token-exact vs the serial dense oracle (prefill + N_DECODE decodes)
+    from repro.kernels.ref import serial_decode_oracle
+
+    for r in reqs:
+        want = serial_decode_oracle(model, params, r.prompt, N_DECODE)
+        assert want == r.output_tokens, (r.rid, want, r.output_tokens)
+    print(f"token parity: {len(reqs)} requests x {N_DECODE + 1} tokens "
+          "== serial dense oracle")
     print("OK")
 
 

@@ -38,15 +38,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import striped
+from repro.core.shmap import shmap as _shmap
 from repro.models import attention as A
 from repro.models import ssm, xlstm
 from repro.models.transformer import DefaultAttnImpl
-
-
-def _shmap(fn, mesh, in_specs, out_specs):
-    return jax.shard_map(
-        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
-    )
 
 
 def _slice_kv_heads(k, v, tp_idx, h_local: int, q_per_kv: int):
@@ -101,10 +96,13 @@ def ring_packed_prefill(
             max_seq_len=max_seq_len, impl=impl, block_q=block_q,
             block_k=block_k,
         )
+    # counted so mesh-executor tests can assert the in-process replay is
+    # NEVER reached when the shard_map ring is armed
+    ops.dispatch_counts["prefill_ring_replay"] += 1
     qs = [q[r::n] for r in range(n)]
     ks = [k[r::n] for r in range(n)]
     vs = [v[r::n] for r in range(n)]
-    offs = [striped.shard_offsets(seq_offsets, n, r) for r in range(n)]
+    offs = list(striped.all_shard_offsets(seq_offsets, n))
     sched = striped.ring_chunk_schedule(n)
     carries: list = [None] * n
     for step in range(n):
@@ -122,6 +120,114 @@ def ring_packed_prefill(
         denom = jnp.where(l == 0.0, 1.0, l)  # l==0 rows are bucket padding
         outs.append(o / denom[..., None])
     return striped.unstripe(jnp.concatenate(outs, axis=0), n, axis=0)
+
+
+def ring_packed_prefill_spmd(
+    mesh: Mesh, q, k, v, seq_offsets, *,
+    sp_axis: str = "data",
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    max_seq_len: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    double_buffer: bool = True,
+):
+    """Mesh-native ring-fused packed ragged prefill: ONE shard_map program
+    over the mesh's ``sp_axis`` in which each data rank physically owns its
+    stripe of the packed token axis and the KV stripes rotate between
+    devices with `lax.ppermute`.
+
+    The packed axis [T] is striped over the ``n = mesh.shape[sp_axis]``
+    ranks (global packed index ``g`` -> rank ``g % n``, local slot
+    ``g // n``); rank r starts holding its own KV stripe.  At ring step s it
+    folds the chunk it currently holds — provenance ``(r - s) mod n``,
+    `striped.chunk_provenance` — into its carried (acc, m, l) flash state
+    with one `ops.prefill_ring_chunk` launch, while (``double_buffer=True``)
+    the NEXT stripe's ppermute is issued BEFORE the fold so the transfer
+    overlaps the chunk compute; ``double_buffer=False`` pins the permute
+    behind the fold with an optimization barrier (the sequential baseline
+    the benchmark compares against).  Every ring leg goes through
+    `ops.ring_ppermute` (dispatch + per-leg byte counters).
+
+    The per-shard segment offsets are static metadata derived from the
+    REPLICATED global ``seq_offsets`` inside the body (`striped
+    .shard_offsets` with the traced rank / chunk provenance) rather than fed
+    as a data-sharded [n, B+1] array: jax 0.4.x's SPMD partitioner
+    mis-reshards tiny computed arrays entering a manual region on a
+    multi-axis mesh, and the ring leg then only needs to move KV bytes.
+
+    Shard ids reach the chunk kernel as traced values (`lax.axis_index`), so
+    the body always uses the banded XLA chunk fallback — the portable SPMD
+    path; specializing the Pallas kernel per rank on TPU is a ROADMAP item.
+
+    q [T,H,D], k/v [T,KVH,D] in PACKED order (T % n == 0); returns the
+    normalized [T,H,D] f32 output, numerically equal to
+    `ops.prefill_packed`."""
+    from repro.kernels import ops
+
+    n = int(mesh.shape[sp_axis])
+    t = q.shape[0]
+    assert n >= 1 and t % n == 0, (t, n)
+    if n == 1:
+        return ops.prefill_packed(
+            q, k, v, seq_offsets, window=window, softcap=softcap,
+            max_seq_len=max_seq_len, impl="xla", block_q=block_q,
+            block_k=block_k,
+        )
+    ops.dispatch_counts["prefill_ring_spmd"] += 1
+    pairs = striped.ring_pairs(n)
+    sp = sp_axis
+
+    def body(qb, kb, vb, ob):
+        # qb/kb/vb: [Tl, ...] this rank's stripe; ob: [B+1] global offsets
+        r = lax.axis_index(sp)
+        q_off = striped.shard_offsets(ob, n, r)
+        kk, vv = kb, vb
+        carry = None
+        for step in range(n):
+            # held chunk's shard id: step-th rotation of the ring
+            k_shard = (r - step) % n
+            k_off = striped.shard_offsets(ob, n, k_shard)
+            if step < n - 1 and double_buffer:
+                # issue the NEXT stripe's transfer before folding this one:
+                # no data dependency on the fold, so XLA/ICI can overlap the
+                # ppermute with the chunk compute
+                nxt = ops.ring_ppermute((kk, vv), sp, pairs)
+            carry = ops.prefill_ring_chunk(
+                qb, kk, vv, q_off, k_off, carry,
+                q_shard=r, k_shard=k_shard, n_shards=n, window=window,
+                softcap=softcap, max_seq_len=max_seq_len, impl="xla",
+                block_q=block_q, block_k=block_k,
+            )
+            if step < n - 1:
+                if double_buffer:
+                    kk, vv = nxt
+                else:
+                    # sequential baseline: the barrier makes the transfer
+                    # depend on the fold, so it cannot start early
+                    kk, vv, carry = lax.optimization_barrier((kk, vv, carry))
+                    kk, vv = ops.ring_ppermute((kk, vv), sp, pairs)
+        o, m, l = carry
+        denom = jnp.where(l == 0.0, 1.0, l)  # l==0 rows are bucket padding
+        return o / denom[..., None]
+
+    fn = _shmap(
+        body, mesh,
+        in_specs=(
+            P(sp, None, None), P(sp, None, None), P(sp, None, None),
+            P(None),
+        ),
+        out_specs=P(sp, None, None),
+    )
+    # striped layout = concat of per-rank stripes, so block-sharding the
+    # leading axis over `sp` hands rank r exactly stripe r
+    out = fn(
+        striped.stripe(q, n, axis=0),
+        striped.stripe(k, n, axis=0),
+        striped.stripe(v, n, axis=0),
+        jnp.asarray(seq_offsets, jnp.int32),
+    )
+    return striped.unstripe(out, n, axis=0)
 
 
 class ESPAttnImpl(DefaultAttnImpl):

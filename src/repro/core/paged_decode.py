@@ -71,11 +71,38 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
         # k_new, merged below) — window predicate qp - kp < window
         qpos = jnp.broadcast_to(jnp.asarray(cache_len), (b,)).astype(jnp.int32)
         part = attn.partial_attention(q, k_new, v_new, None, softcap=softcap)
+        # the master device the per-shard partials return to (the paper's
+        # "send back partial results"): pool mirrors bound to their own
+        # data-shard devices (mesh executor) compute each partial in place
+        # over the shard and only the tiny (o, m, l) rides home for the
+        # LSE-merge.  Single-device pools skip the transfer entirely.
+        def _dev(x):
+            try:  # concrete arrays only — tracers have no .devices()
+                return next(iter(x.devices()))
+            except Exception:
+                return None
+
+        home = _dev(q)
         for s in self._shards:
+            sdev = _dev(s.k_pages)
+            q_s, qpos_s = q, qpos
+            if home is not None and sdev is not None and sdev != home:
+                # the q broadcast: ship the tiny query (and its positions)
+                # to the shard's device so the partial computes WHERE the KV
+                # stripe lives
+                import jax
+
+                q_s = jax.device_put(q, sdev)
+                qpos_s = jax.device_put(qpos, sdev)
             p = ops.paged_decode_partial(
-                q, s.k_pages[li], s.v_pages[li], s.table, s.lengths, s.pos,
-                query_pos=qpos, window=window, softcap=softcap,
+                q_s, s.k_pages[li], s.v_pages[li], s.table, s.lengths, s.pos,
+                query_pos=qpos_s, window=window, softcap=softcap,
                 impl=self._impl,
             )
+            if home is not None and sdev is not None and sdev != home:
+                # only the tiny (o, m, l) partial rides back to the master
+                import jax
+
+                p = attn.Partial(*(jax.device_put(x, home) for x in p))
             part = attn.merge_partial(part, p)
         return attn.finalize_partial(part).astype(q.dtype)

@@ -10,11 +10,15 @@ masks cross-request attention — instead of O(batch) per-request
 
 DoP>1 ESP groups arm the same impl with ``dop=n``: the packed axis is then
 striped across the group's n instances and attention runs as the fused
-striped ring (`core.esp.ring_packed_prefill`) — one packed ragged
-`ops.prefill_ring_chunk` launch per instance per ring step, carrying the
-(acc, m, l) flash state across steps — so the paper's long-prompt
-multi-instance prefill gets packed-kernel speed instead of the per-request
-serial fallback.
+striped ring — one packed ragged `ops.prefill_ring_chunk` launch per
+instance per ring step, carrying the (acc, m, l) flash state across steps —
+so the paper's long-prompt multi-instance prefill gets packed-kernel speed
+instead of the per-request serial fallback.  Two ring deployments behind
+the same arming call: the in-process replay (`core.esp.ring_packed_prefill`,
+LocalExecutor) and, with ``mesh=``, ONE shard_map program over the mesh's
+"data" axis (`core.esp.ring_packed_prefill_spmd`, MeshExecutor) where each
+instance physically holds its stripe and the KV chunks `ppermute` between
+devices, double-buffered against the fold.
 
 The impl subclasses `DefaultAttnImpl`, so outside a `begin_step`/`end_step`
 window (per-request prefill, oracle comparisons) it behaves exactly like the
@@ -35,25 +39,36 @@ class PackedPrefillAttnImpl(DefaultAttnImpl):
         self._offsets = None  # [B+1] packed segment boundaries
         self._max_seq_len: Optional[int] = None  # static reach bound
         self._dop: int = 1  # ESP group size: >1 runs the fused striped ring
+        self._mesh = None  # DoP>1 on a real mesh: shard_map ring (esp.*_spmd)
+        self._double_buffer = True
         self._impl = impl  # kernel impl override (None -> ops default)
 
     def begin_step(
-        self, seq_offsets, max_seq_len: Optional[int] = None, dop: int = 1
+        self, seq_offsets, max_seq_len: Optional[int] = None, dop: int = 1,
+        mesh=None, double_buffer: bool = True,
     ) -> None:
         """Arm the packed path for one prefill step.  `max_seq_len` is a
         STATIC python upper bound on the longest prompt in the batch (the
         engine buckets it) — it sizes the banded XLA fallback's reach.
         `dop` (STATIC) is the ESP group size: with dop>1 the packed token
         axis (which the engine buckets to a multiple of dop) stripes across
-        the group and attention runs the fused ring."""
+        the group and attention runs the fused ring — in-process replay by
+        default, or as ONE shard_map program over `mesh`'s "data" axis (the
+        mesh executor; requires ``mesh.shape["data"] == dop``) with the KV
+        stripes `ppermute`d between devices, double-buffered against the
+        chunk compute unless ``double_buffer=False``."""
         self._offsets = seq_offsets
         self._max_seq_len = max_seq_len
         self._dop = int(dop)
+        self._mesh = mesh
+        self._double_buffer = double_buffer
 
     def end_step(self) -> None:
         self._offsets = None
         self._max_seq_len = None
         self._dop = 1
+        self._mesh = None
+        self._double_buffer = True
 
     def prefill_attn(self, q, k, v, q_pos, k_pos, *, causal, window, softcap):
         if self._offsets is None:
@@ -62,7 +77,18 @@ class PackedPrefillAttnImpl(DefaultAttnImpl):
                 softcap=softcap,
             )
         assert q.shape[0] == 1, "packed prefill uses batch dim 1"
-        if self._dop > 1:
+        if self._dop > 1 and self._mesh is not None:
+            from repro.core.esp import ring_packed_prefill_spmd
+
+            assert int(self._mesh.shape["data"]) == self._dop, (
+                dict(self._mesh.shape), self._dop
+            )
+            out = ring_packed_prefill_spmd(
+                self._mesh, q[0], k[0], v[0], self._offsets, window=window,
+                softcap=softcap, max_seq_len=self._max_seq_len,
+                double_buffer=self._double_buffer,
+            )
+        elif self._dop > 1:
             from repro.core.esp import ring_packed_prefill
 
             out = ring_packed_prefill(

@@ -27,13 +27,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.shmap import shmap as _shmap
 from repro.models import layers, ssm, xlstm
-
-
-def _shmap(fn, mesh, in_specs, out_specs):
-    return jax.shard_map(
-        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
-    )
 
 
 def _shift_pairs(n: int, shift: int = 1):

@@ -84,6 +84,28 @@ def ring_chunk_schedule(n: int, group: int | None = None) -> list[list[int]]:
     return sched
 
 
+def chunk_provenance(n: int, step: int, group: int | None = None) -> list[int]:
+    """Closed form of ``ring_chunk_schedule(n, group)[step]``: after ``step``
+    forwards of the `ring_pairs` rotation, rank ``r`` holds the chunk that
+    originated at rank ``base + (r - step) mod g`` of its subgroup.  The
+    SPMD ring driver INLINES this formula with a traced ``axis_index`` in
+    place of ``r`` (`esp.ring_packed_prefill_spmd`); this helper is the
+    testable closed form the parity test pins against the simulated
+    ppermute schedule — change them together."""
+    g = group or n
+    return [(r // g) * g + (r % g - step) % g for r in range(n)]
+
+
+def all_shard_offsets(seq_offsets, n: int):
+    """[n, B+1] per-shard segment offsets, stacked — the static per-shard
+    schedule of a striped packed batch (row r = `shard_offsets(.., n, r)`),
+    consumed by the in-process ring replay (`esp.ring_packed_prefill`).
+    The mesh executor's shard_map body instead derives its row in place
+    from the replicated global offsets with a traced shard id (see
+    `esp.ring_packed_prefill_spmd`), so only KV bytes ride the ring."""
+    return jnp.stack([shard_offsets(seq_offsets, n, r) for r in range(n)])
+
+
 def shard_offsets(seq_offsets, n: int, shard: int):
     """Per-shard segment offsets of a striped packed axis.
 

@@ -1,0 +1,457 @@
+"""Pluggable compute executors: every real-mode kernel-dispatch body lives
+here, behind one seam.
+
+`engine/server.py` owns the control plane — clock, events, scheduling,
+request lifecycle, pool *accounting*; an Executor owns the compute plane:
+how a scheduled PrefillBatch / DecodeBatch actually turns into model steps,
+kernel launches and KV writes.  The engine calls exactly four entry points
+(`prefill`, `decode`, plus the `prefill_packed`/`decode_paged` fast paths it
+never invokes directly but benchmarks do), so policies and executors evolve
+independently:
+
+  * `LocalExecutor` — today's in-process paths, moved verbatim from the
+    engine: ONE jitted packed model step per prefill batch (DoP>1 groups
+    replay the striped ppermute ring in-process, one ring-chunk launch per
+    instance per ring step), batched paged decode with per-instance
+    partials, and the per-request serial fallbacks for recurrent/moe
+    families.
+  * `MeshExecutor` — the SPMD production shape: the SAME packed prefill
+    step, but the DoP>1 ring runs as ONE `shard_map` program over a real
+    ``("data", "model")`` mesh (`core.esp.ring_packed_prefill_spmd`): each
+    elastic instance physically owns its stripe of the packed token axis on
+    its own device, KV stripes rotate between devices with `lax.ppermute`,
+    and the next stripe's transfer is double-buffered against the current
+    chunk's compute.  Each instance's KV-pool device mirror is bound to its
+    own data-shard device, so `fill_packed` write-through lands every
+    reserved placement column on the device that owns it — ESP scale-down
+    stays zero-migration *physically*, not just in the bookkeeping.
+
+Exactness is anchored to the dense oracle in `kernels/ref.py`: both
+executors produce bit-identical token sequences to the serial per-request
+path (tests/test_ring_prefill.py, tests/mesh_exec_cases.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+
+class LocalExecutor:
+    """In-process executor: one device, ring replayed as a chunk schedule."""
+
+    def __init__(self, engine):
+        self.eng = engine
+        # batched paged decode: the multi-master paged attention impl is
+        # swapped in only around a batched decode step (the model object is
+        # caller-owned and may be shared between engines).  Pure-attention
+        # families only: hybrids/ssm keep the serial per-request path, and
+        # moe stays serial because expert-capacity dropping is batch-size
+        # dependent (batching would change generated tokens).
+        self._paged_impl = None
+        # packed ragged prefill: one jitted model step per bucketed
+        # (total_tokens, batch, max_len, dop) shape — O(log max_tokens)
+        # programs per DoP instead of one per distinct prompt length.  DoP>1
+        # ESP groups run the SAME packed step with the token axis striped
+        # across the group and attention ring-fused — no serial fallback for
+        # scaled-up groups.  Same family gating as the paged decode path.
+        self._packed_prefill_impl = None
+        self._prefill_programs: Dict[Tuple, Any] = {}
+        if engine.cfg.family in ("dense", "vlm"):
+            from repro.core.paged_decode import PagedDecodeAttnImpl
+            from repro.core.paged_prefill import PackedPrefillAttnImpl
+            from repro.models.transformer import DefaultAttnImpl
+
+            if type(getattr(engine.model, "attn_impl", None)) is DefaultAttnImpl:
+                self._paged_impl = PagedDecodeAttnImpl()
+                self._packed_prefill_impl = PackedPrefillAttnImpl()
+
+    # ------------------------------------------------------------- buckets
+    @staticmethod
+    def _bucket(n: int, lo: int = 16) -> int:
+        """Power-of-two padding bucket: O(log max) compiled shapes (shared
+        formula with the pool's scatter-index bucketing)."""
+        from repro.kvcache.pool import _pad_bucket
+
+        return max(lo, _pad_bucket(n))
+
+    @classmethod
+    def _token_bucket(cls, n: int, lo: int = 16) -> int:
+        """Packed-token-axis bucket: powers of two plus their 3/4 points
+        (16, 24, 32, 48, 64, ...).  Still O(log max_tokens) compiled shapes
+        — 2x the constant — but worst-case padding waste drops from ~2x to
+        ~4/3 on the axis every attention launch scans."""
+        b = cls._bucket(n, lo)
+        mid = (b * 3) // 4
+        return mid if (n <= mid and mid >= lo) else b
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, batch) -> None:
+        """Dispatch one prefill batch: packed fast path when armed and every
+        prompt is materialized, per-request serial otherwise.
+
+        Fast-path guard: every instance holding a request's reserved
+        placement must still be alive — scattering would silently skip the
+        dead shard and leave partial KV on EITHER path, so such requests
+        are pruned and requeued for recompute (normally _on_prefill_done
+        already did this; the re-check covers direct callers) while the
+        rest of the batch keeps packed speed."""
+        eng = self.eng
+        lost = [r for r in batch.requests if eng._placement_lost(batch, r)]
+        if lost:
+            batch.requests = [r for r in batch.requests if r not in lost]
+            batch.instances = [
+                i for i in batch.instances if i not in eng.failed
+            ]
+            for r in lost:
+                eng.pool.free_request(r.rid)
+                eng._requeue_for_recompute(r)
+                if r not in eng.pending:
+                    eng.pending.append(r)
+            if not batch.requests:
+                return
+        if self._packed_prefill_impl is not None and all(
+            r.prompt is not None and len(r.prompt) == r.input_len
+            for r in batch.requests
+        ):
+            return self.prefill_packed(batch)
+        return self.prefill_serial(batch)
+
+    def _arm_packed_step(self, impl, offsets, max_len_b: int, dop: int):
+        """Arm the packed attention impl for one jitted step (the mesh
+        executor overrides this to hand the impl its shard_map mesh)."""
+        impl.begin_step(offsets, max_len_b, dop=dop)
+
+    def _program_key(self, tb: int, bb: int, max_len_b: int, dop: int):
+        return (tb, bb, max_len_b, dop)
+
+    def _packed_prefill_step(self, tb: int, bb: int, max_len_b: int, dop: int):
+        """Jitted packed prefill program for one bucket tuple; cached so
+        the compile count stays O(log max_tokens) per DoP (the mesh executor
+        additionally keys by mesh shape)."""
+        key = self._program_key(tb, bb, max_len_b, dop)
+        fn = self._prefill_programs.get(key)
+        if fn is None:
+            import jax
+
+            model, impl = self.eng.model, self._packed_prefill_impl
+            arm = self._arm_packed_step
+
+            def step(params, tokens, positions, offsets, last_idx):
+                arm(impl, offsets, max_len_b, dop)
+                try:
+                    return model.prefill_packed(
+                        params, {"tokens": tokens[None]}, positions, last_idx
+                    )
+                finally:
+                    impl.end_step()
+
+            fn = self._prefill_programs[key] = jax.jit(step)
+        return fn
+
+    def prefill_packed(self, batch) -> None:
+        """One packed model step for the WHOLE prefill batch: prompts are
+        concatenated on a single (bucketed) token axis, attention is
+        segment-masked by one ragged kernel launch per layer (DoP>1 groups:
+        one ring-chunk launch per instance per ring step), first tokens are
+        sampled from the packed logits, and the per-layer KV output is
+        scattered straight into paged device storage at the slots the
+        scheduler reserved (`pool.fill_packed` write-through — the decode
+        mirror never re-uploads prefill KV)."""
+        import jax.numpy as jnp
+
+        eng = self.eng
+        reqs = batch.requests
+        lens = [len(r.prompt) for r in reqs]
+        total = sum(lens)
+        # ring degree = the (alive) ESP group driving this batch; the token
+        # bucket is a bucketed SHARD length x dop so the striped shards stay
+        # block-aligned (dop=1 degenerates to plain token bucketing)
+        dop = max(len([i for i in batch.instances if i not in eng.failed]), 1)
+        tb = self._token_bucket(-(-total // dop)) * dop
+        bb = self._bucket(len(reqs), lo=1)
+        max_len_b = self._bucket(max(lens))
+        tokens = np.zeros(tb, np.int32)
+        positions = np.zeros(tb, np.int32)
+        offsets = np.full(bb + 1, total, np.int32)
+        offsets[0] = 0
+        last_idx = np.zeros(bb, np.int32)
+        c = 0
+        for b, r in enumerate(reqs):
+            n = lens[b]
+            tokens[c : c + n] = np.asarray(r.prompt, np.int32)
+            positions[c : c + n] = np.arange(n)
+            c += n
+            offsets[b + 1] = c
+            last_idx[b] = c - 1
+        fn = self._packed_prefill_step(tb, bb, max_len_b, dop)
+        prev_impl = eng.model.attn_impl
+        eng.model.attn_impl = self._packed_prefill_impl
+        try:
+            logits, (k_packed, v_packed) = fn(
+                eng.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(offsets), jnp.asarray(last_idx),
+            )
+        finally:
+            eng.model.attn_impl = prev_impl
+        logits = np.asarray(logits)
+        for b, r in enumerate(reqs):
+            r.output_tokens.append(eng._sample_token(logits[b]))
+        if not eng.pool.pools[0].store_values:
+            return
+        # direct-to-pool paged KV writes: per instance, gather the packed
+        # columns this instance retains (striped placement from
+        # batch.placement — ESP scale-down stays zero-migration) and
+        # write-through into its mirror at the reserved block-table slots
+        # (per-data-shard mirrors under the mesh executor: the columns land
+        # on the instance's OWN device)
+        starts = np.concatenate([[0], np.cumsum(lens)])
+        per_inst: Dict[int, Tuple[List[np.ndarray], List[np.ndarray]]] = {}
+        for b, r in enumerate(reqs):
+            for inst, pos_list in batch.placement.get(r.rid, {}).items():
+                if not pos_list or inst in eng.failed:
+                    continue
+                p = np.asarray(pos_list, np.int64)
+                cols, slots = per_inst.setdefault(inst, ([], []))
+                cols.append(starts[b] + p)
+                slots.append(eng.pool.pools[inst].slots_for(r.rid, p))
+        for inst, (cols, slots) in per_inst.items():
+            cidx = jnp.asarray(np.concatenate(cols))
+            eng.pool.pools[inst].fill_packed(
+                np.concatenate(slots),
+                jnp.take(k_packed, cidx, axis=1),
+                jnp.take(v_packed, cidx, axis=1),
+            )
+
+    def prefill_serial(self, batch) -> None:
+        """Per-request fallback (recurrent/hybrid state, moe capacity)."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        eng = self.eng
+        for r in batch.requests:
+            # dispatch-counted so tests/benches can assert the packed paths
+            # (incl. DoP>1 ring fusion) never fall back to serial prefill
+            ops.dispatch_counts["prefill_serial_model"] += 1
+            toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
+            logits, cache = eng.model.prefill(eng.params, {"tokens": toks})
+            r.output_tokens.append(
+                eng._sample_token(np.asarray(logits[0, -1]))
+            )
+            if cache.k is not None:
+                k = np.asarray(cache.k[:, 0], np.float32)  # [L, T, KVH, D]
+                v = np.asarray(cache.v[:, 0], np.float32)
+                assign = batch.placement[r.rid]
+                for inst, positions in assign.items():
+                    if positions and inst not in eng.failed:
+                        eng.pool.pools[inst].fill(
+                            r.rid, positions, k[:, positions], v[:, positions]
+                        )
+            if cache.ssm is not None:
+                eng._real_cache[r.rid] = cache.ssm
+
+    # -------------------------------------------------------------- decode
+    def decode(self, g) -> None:
+        if self._paged_impl is not None and self.eng.pool.pools[0].store_values:
+            return self.decode_paged(g)
+        return self.decode_serial(g)
+
+    def decode_paged(self, g) -> None:
+        """Gather-free batched decode: ONE model step for the whole group;
+        per layer, one paged-kernel launch per instance over the pool storage
+        in place (block tables), partials LSE-merged multi-master style."""
+        import jax.numpy as jnp
+
+        from repro.core.paged_decode import PagedShard
+        from repro.models.transformer import Cache
+
+        eng = self.eng
+        rids = [r.rid for r in g.requests]
+        n_cached = np.array([r.seq_len - 1 for r in g.requests], np.int32)
+        shards, covered = [], np.zeros(len(rids), np.int64)
+        for pool in eng.pool.pools:
+            if pool.instance_id in eng.failed:
+                continue
+            table, lengths = pool.block_table(rids)
+            if not lengths.any():
+                continue
+            covered += lengths
+            # pool-owned incrementally-synced mirror: steady-state decode
+            # uploads one slot per request; packed-prefill slots upload 0
+            kdev, vdev, posdev = pool.device_kv()
+            paged_shape = (pool.n_attn, pool.n_pages, pool.page_size) + kdev.shape[2:]
+            shards.append(PagedShard(
+                # block tables ride with the mirror's device so the whole
+                # per-shard partial computes where the stripe lives
+                k_pages=kdev.reshape(paged_shape),
+                v_pages=vdev.reshape(paged_shape),
+                table=pool._dev_put(table),
+                lengths=pool._dev_put(lengths),
+                # per-slot positions are only consumed by window masking
+                pos=(posdev.reshape(pool.n_pages, pool.page_size)
+                     if eng.cfg.sliding_window else None),
+            ))
+        # cache holds tokens 0..seq_len-2; the processed token's KV is
+        # produced by this step and appended at the master afterwards
+        assert (covered == n_cached).all(), (covered, n_cached)
+        toks = jnp.asarray([r.output_tokens[-1] for r in g.requests], jnp.int32)
+        cache = Cache(length=jnp.asarray(n_cached))
+        prev_impl = eng.model.attn_impl
+        eng.model.attn_impl = self._paged_impl
+        self._paged_impl.begin_step(shards)
+        try:
+            logits, _, kvs = eng.model.decode(eng.params, toks, cache)
+        finally:
+            self._paged_impl.end_step()
+            eng.model.attn_impl = prev_impl
+        logits = np.asarray(logits)
+        for b, r in enumerate(g.requests):
+            r.output_tokens.append(eng._sample_token(logits[b]))
+            if kvs is not None:
+                # stash; _on_decode_done fills it once the slot is allocated
+                eng._pending_kv[r.rid] = (
+                    np.asarray(kvs[0][:, b], np.float32),  # [L, 1, KVH, D]
+                    np.asarray(kvs[1][:, b], np.float32),
+                )
+
+    def decode_serial(self, g) -> None:
+        """Per-request fallback (recurrent/hybrid state or custom impls)."""
+        import jax.numpy as jnp
+
+        from repro.models.transformer import Cache
+
+        eng = self.eng
+        for r in g.requests:
+            positions, k, v = eng.pool.gather_request(r.rid)
+            # cache holds tokens 0..seq_len-2; the processed token's KV is
+            # produced by this step and appended at the master afterwards
+            n_cached = r.seq_len - 1
+            if k is not None:
+                assert len(positions) == n_cached, (len(positions), n_cached)
+            cache = Cache(
+                k=jnp.asarray(k[:, None].astype(eng.model.dtype)) if k is not None else None,
+                v=jnp.asarray(v[:, None].astype(eng.model.dtype)) if v is not None else None,
+                length=jnp.asarray([n_cached], jnp.int32),
+                ssm=eng._real_cache.get(r.rid),
+            )
+            last_tok = r.output_tokens[-1]
+            logits, new_cache, kvs = eng.model.decode(
+                eng.params, jnp.asarray([last_tok], jnp.int32), cache
+            )
+            r.output_tokens.append(eng._sample_token(np.asarray(logits[0])))
+            if new_cache.ssm is not None:
+                eng._real_cache[r.rid] = new_cache.ssm
+            if kvs is not None:
+                # stash; _on_decode_done fills it once the slot is allocated
+                eng._pending_kv[r.rid] = (
+                    np.asarray(kvs[0][:, 0], np.float32),  # [L, 1, KVH, D]
+                    np.asarray(kvs[1][:, 0], np.float32),
+                )
+
+
+class MeshExecutor(LocalExecutor):
+    """SPMD executor: DoP>1 packed ring prefill as a real shard_map program.
+
+    Construction binds each engine instance ``i`` to data-mesh coordinate
+    ``i`` of a ``("data", "model")`` mesh (`launch.mesh`): the instance's
+    KV-pool device mirror is pinned to ``mesh.devices[i, 0]`` so both the
+    ring pass's `fill_packed` write-through and the paged decode partials
+    run on the device that owns the stripe.  A prefill batch over a subset
+    of instances runs on the sub-mesh of exactly those devices (cached per
+    instance tuple), so elastic DoP groups map to disjoint device groups of
+    one physical mesh, like the paper's ESP groups on one GPU cluster.
+
+    Decode reuses the Local paths: the per-instance paged partials already
+    execute on each instance's own device (the pool mirrors are bound
+    there) and the LSE-merge pulls only the tiny (o, m, l) partials to the
+    master — wiring that merge through a decode-side shard_map is the
+    ROADMAP's "overlap decode combine" item, now tractable behind this
+    seam.
+
+    ``double_buffer=False`` degrades the ring to the sequential baseline
+    (transfer strictly after compute) — the benchmark's comparison arm.
+    """
+
+    def __init__(self, engine, mesh=None, *, double_buffer: bool = True):
+        super().__init__(engine)
+        if mesh is None:
+            import jax
+
+            from repro.launch.mesh import make_test_mesh
+
+            n_dev = len(jax.devices())
+            data = min(len(engine.pool.pools), n_dev)
+            mesh = make_test_mesh(data=data, model=max(n_dev // data, 1))
+        assert "data" in mesh.axis_names, mesh.axis_names
+        self.mesh = mesh
+        self.double_buffer = double_buffer
+        self._group_meshes: Dict[Tuple[int, ...], Any] = {}
+        self._bind_pool_devices()
+
+    def _bind_pool_devices(self) -> None:
+        """Pin instance i's KV mirror to data-shard device i (mod data)."""
+        devs = self._data_devices()
+        for i, pool in enumerate(self.eng.pool.pools):
+            pool.bind_device(devs[i % len(devs)])
+
+    def _data_devices(self):
+        """One device per data coordinate (model coordinate 0)."""
+        import numpy as np_
+
+        devs = np_.asarray(self.mesh.devices)
+        data_ax = list(self.mesh.axis_names).index("data")
+        # move the data axis first, take coordinate 0 of every other axis
+        devs = np_.moveaxis(devs, data_ax, 0)
+        return [devs[i].flat[0] for i in range(devs.shape[0])]
+
+    def _group_mesh(self, instances):
+        """Sub-mesh ("data", "model") over exactly the group's devices.
+        Returns None (-> in-process replay) when the group cannot get one
+        distinct data-shard device per instance (more engine instances than
+        data coordinates and the group aliases)."""
+        import numpy as np_
+        from jax.sharding import Mesh
+
+        key = tuple(sorted(instances))
+        if key in self._group_meshes:
+            return self._group_meshes[key]
+        devs = np_.asarray(self.mesh.devices)
+        data_ax = list(self.mesh.axis_names).index("data")
+        devs = np_.moveaxis(devs, data_ax, 0)
+        n_data = devs.shape[0]
+        coords = [i % n_data for i in key]
+        if len(set(coords)) < len(coords):
+            m = None  # aliased devices: no physical ring for this group
+        else:
+            rows = np_.stack(
+                [devs[c].reshape(-1) for c in coords]
+            )  # [dop, model*...]
+            m = Mesh(rows, ("data", "model"))
+        self._group_meshes[key] = m
+        return m
+
+    # prefill arming: the SAME packed step, ring under shard_map ----------
+    def prefill_packed(self, batch) -> None:
+        alive = tuple(
+            i for i in batch.instances if i not in self.eng.failed
+        )
+        self._step_mesh = self._group_mesh(alive) if len(alive) > 1 else None
+        try:
+            return super().prefill_packed(batch)
+        finally:
+            self._step_mesh = None
+
+    def _program_key(self, tb, bb, max_len_b, dop):
+        # one compiled program per (bucket tuple, dop, mesh): the concrete
+        # mesh (hashable) keys the cache because the shard_map bakes the
+        # device group in — two DoP groups of the same shape on different
+        # devices need separate programs
+        return (tb, bb, max_len_b, dop, getattr(self, "_step_mesh", None))
+
+    def _arm_packed_step(self, impl, offsets, max_len_b, dop):
+        impl.begin_step(
+            offsets, max_len_b, dop=dop,
+            mesh=getattr(self, "_step_mesh", None),
+            double_buffer=self.double_buffer,
+        )

@@ -288,9 +288,18 @@ class BaseServingEngine:
 
 
 class LoongServeEngine(BaseServingEngine):
-    """The paper's system: ESP + four-step global manager."""
+    """The paper's system: ESP + four-step global manager.
 
-    def __init__(self, *args, mcfg: Optional[ManagerConfig] = None, **kwargs):
+    Real-mode compute is delegated to an executor (engine/executor.py):
+    `LocalExecutor` (default) runs the in-process packed/paged paths;
+    `MeshExecutor` (``executor="mesh"`` or an explicit ``mesh=``) runs the
+    DoP>1 packed ring prefill as a shard_map program on a real
+    ("data", "model") device mesh with per-instance KV mirrors bound to
+    their own data-shard devices.  The engine itself holds NO kernel
+    dispatch — only scheduling, lifecycle and accounting."""
+
+    def __init__(self, *args, mcfg: Optional[ManagerConfig] = None,
+                 executor: Optional[str] = None, mesh=None, **kwargs):
         super().__init__(*args, **kwargs)
         self.manager = GlobalManager(self.cfg, self.sib, self.pool,
                                      mcfg or ManagerConfig())
@@ -300,32 +309,15 @@ class LoongServeEngine(BaseServingEngine):
         self._running_decode_ends: Dict[int, float] = {}  # gid -> end time
         self._decode_launch_seq: Dict[int, Dict[int, int]] = {}  # gid -> rid -> seq
         self._prefill_launch_epoch: Dict[int, Dict[int, int]] = {}  # bid -> rid -> n_evictions
-        # batched paged decode: the multi-master paged attention impl is
-        # swapped in only around a batched decode step (the model object is
-        # caller-owned and may be shared between engines).  Pure-attention
-        # families only: hybrids/ssm keep the serial per-request path, and
-        # moe stays serial because expert-capacity dropping is batch-size
-        # dependent (batching would change generated tokens).
-        self._paged_impl = None
-        # packed ragged prefill: one jitted model step per bucketed
-        # (total_tokens, batch, max_len, dop) shape — O(log max_tokens)
-        # programs per DoP instead of one per distinct prompt length.  DoP>1
-        # ESP groups run the SAME packed step with the token axis striped
-        # across the group and attention ring-fused (one packed chunk launch
-        # per instance per ring step) — no serial fallback for scaled-up
-        # groups.  Same family gating as the paged decode path (moe:
-        # expert-capacity dropping is batch-size dependent, packing would
-        # change generated tokens).
-        self._packed_prefill_impl = None
-        self._prefill_programs: Dict[Tuple[int, int, int, int], Any] = {}
-        if self.real and self.cfg.family in ("dense", "vlm"):
-            from repro.core.paged_decode import PagedDecodeAttnImpl
-            from repro.core.paged_prefill import PackedPrefillAttnImpl
-            from repro.models.transformer import DefaultAttnImpl
+        self.executor = None
+        if self.real:
+            from repro.engine.executor import LocalExecutor, MeshExecutor
 
-            if type(getattr(self.model, "attn_impl", None)) is DefaultAttnImpl:
-                self._paged_impl = PagedDecodeAttnImpl()
-                self._packed_prefill_impl = PackedPrefillAttnImpl()
+            if mesh is not None or executor == "mesh":
+                self.executor = MeshExecutor(self, mesh)
+            else:
+                assert executor in (None, "local"), executor
+                self.executor = LocalExecutor(self)
 
     # ------------------------------------------------------------- schedule
     def _try_schedule(self) -> None:
@@ -564,50 +556,32 @@ class LoongServeEngine(BaseServingEngine):
             self.ready_decode.append(DecodeBatch(live, g.instances, g.masters))
 
     # ----------------------------------------------------------- real compute
-    @staticmethod
-    def _bucket(n: int, lo: int = 16) -> int:
-        """Power-of-two padding bucket: O(log max) compiled shapes (shared
-        formula with the pool's scatter-index bucketing)."""
-        from repro.kvcache.pool import _pad_bucket
-
-        return max(lo, _pad_bucket(n))
-
-    @classmethod
-    def _token_bucket(cls, n: int, lo: int = 16) -> int:
-        """Packed-token-axis bucket: powers of two plus their 3/4 points
-        (16, 24, 32, 48, 64, ...).  Still O(log max_tokens) compiled shapes
-        — 2x the constant — but worst-case padding waste drops from ~2x to
-        ~4/3 on the axis every attention launch scans."""
-        b = cls._bucket(n, lo)
-        mid = (b * 3) // 4
-        return mid if (n <= mid and mid >= lo) else b
-
+    # Thin dispatch only: the bodies live in engine/executor.py behind the
+    # LocalExecutor/MeshExecutor seam.  The `_real_*` names are kept as the
+    # stable probe points benchmarks and tests drive directly.
     def _real_prefill(self, batch: PrefillBatch) -> None:
-        # fast-path guard: every instance holding a request's reserved
-        # placement must still be alive — scattering would silently skip the
-        # dead shard and leave partial KV on EITHER path, so such requests
-        # are pruned and requeued for recompute (normally _on_prefill_done
-        # already did this; the re-check covers direct callers) while the
-        # rest of the batch keeps packed speed.
-        lost = [r for r in batch.requests if self._placement_lost(batch, r)]
-        if lost:
-            batch.requests = [r for r in batch.requests if r not in lost]
-            batch.instances = [
-                i for i in batch.instances if i not in self.failed
-            ]
-            for r in lost:
-                self.pool.free_request(r.rid)
-                self._requeue_for_recompute(r)
-                if r not in self.pending:
-                    self.pending.append(r)
-            if not batch.requests:
-                return
-        if self._packed_prefill_impl is not None and all(
-            r.prompt is not None and len(r.prompt) == r.input_len
-            for r in batch.requests
-        ):
-            return self._real_prefill_packed(batch)
-        return self._real_prefill_serial(batch)
+        return self.executor.prefill(batch)
+
+    def _real_prefill_packed(self, batch: PrefillBatch) -> None:
+        return self.executor.prefill_packed(batch)
+
+    def _real_prefill_serial(self, batch: PrefillBatch) -> None:
+        return self.executor.prefill_serial(batch)
+
+    def _real_decode(self, g: DecodeBatch) -> None:
+        return self.executor.decode(g)
+
+    def _real_decode_paged(self, g: DecodeBatch) -> None:
+        return self.executor.decode_paged(g)
+
+    def _real_decode_serial(self, g: DecodeBatch) -> None:
+        return self.executor.decode_serial(g)
+
+    @property
+    def _prefill_programs(self):
+        """Compiled packed-prefill program cache (owned by the executor;
+        empty for sim-mode engines, which have no executor)."""
+        return self.executor._prefill_programs if self.executor else {}
 
     def _placement_lost(self, batch: PrefillBatch, r: Request) -> bool:
         """True when part of the request's reserved KV placement sits on a
@@ -617,216 +591,12 @@ class LoongServeEngine(BaseServingEngine):
             for inst, pos_list in batch.placement.get(r.rid, {}).items()
         )
 
-    def _packed_prefill_step(self, tb: int, bb: int, max_len_b: int, dop: int):
-        """Jitted packed prefill program for one bucket tuple; cached so
-        the compile count stays O(log max_tokens) per DoP."""
-        key = (tb, bb, max_len_b, dop)
-        fn = self._prefill_programs.get(key)
-        if fn is None:
-            import jax
-
-            model, impl = self.model, self._packed_prefill_impl
-
-            def step(params, tokens, positions, offsets, last_idx):
-                impl.begin_step(offsets, max_len_b, dop=dop)
-                try:
-                    return model.prefill_packed(
-                        params, {"tokens": tokens[None]}, positions, last_idx
-                    )
-                finally:
-                    impl.end_step()
-
-            fn = self._prefill_programs[key] = jax.jit(step)
-        return fn
-
-    def _real_prefill_packed(self, batch: PrefillBatch) -> None:
-        """One packed model step for the WHOLE prefill batch: prompts are
-        concatenated on a single (bucketed) token axis, attention is
-        segment-masked by one ragged kernel launch per layer (DoP>1 groups:
-        one ring-chunk launch per instance per ring step over the striped
-        packed axis), first tokens are sampled from the packed logits, and
-        the per-layer KV output is scattered straight into paged device
-        storage at the slots the scheduler reserved (`pool.fill_packed`
-        write-through — the decode mirror never re-uploads prefill KV)."""
-        import jax.numpy as jnp
-
-        reqs = batch.requests
-        lens = [len(r.prompt) for r in reqs]
-        total = sum(lens)
-        # ring degree = the (alive) ESP group driving this batch; the token
-        # bucket is a bucketed SHARD length x dop so the striped shards stay
-        # block-aligned (dop=1 degenerates to plain token bucketing)
-        dop = max(len([i for i in batch.instances if i not in self.failed]), 1)
-        tb = self._token_bucket(-(-total // dop)) * dop
-        bb = self._bucket(len(reqs), lo=1)
-        max_len_b = self._bucket(max(lens))
-        tokens = np.zeros(tb, np.int32)
-        positions = np.zeros(tb, np.int32)
-        offsets = np.full(bb + 1, total, np.int32)
-        offsets[0] = 0
-        last_idx = np.zeros(bb, np.int32)
-        c = 0
-        for b, r in enumerate(reqs):
-            n = lens[b]
-            tokens[c : c + n] = np.asarray(r.prompt, np.int32)
-            positions[c : c + n] = np.arange(n)
-            c += n
-            offsets[b + 1] = c
-            last_idx[b] = c - 1
-        fn = self._packed_prefill_step(tb, bb, max_len_b, dop)
-        prev_impl = self.model.attn_impl
-        self.model.attn_impl = self._packed_prefill_impl
-        try:
-            logits, (k_packed, v_packed) = fn(
-                self.params, jnp.asarray(tokens), jnp.asarray(positions),
-                jnp.asarray(offsets), jnp.asarray(last_idx),
-            )
-        finally:
-            self.model.attn_impl = prev_impl
-        logits = np.asarray(logits)
-        for b, r in enumerate(reqs):
-            r.output_tokens.append(self._sample_token(logits[b]))
-        if not self.pool.pools[0].store_values:
-            return
-        # direct-to-pool paged KV writes: per instance, gather the packed
-        # columns this instance retains (striped placement from
-        # batch.placement — ESP scale-down stays zero-migration) and
-        # write-through into its mirror at the reserved block-table slots
-        starts = np.concatenate([[0], np.cumsum(lens)])
-        per_inst: Dict[int, Tuple[List[np.ndarray], List[np.ndarray]]] = {}
-        for b, r in enumerate(reqs):
-            for inst, pos_list in batch.placement.get(r.rid, {}).items():
-                if not pos_list or inst in self.failed:
-                    continue
-                p = np.asarray(pos_list, np.int64)
-                cols, slots = per_inst.setdefault(inst, ([], []))
-                cols.append(starts[b] + p)
-                slots.append(self.pool.pools[inst].slots_for(r.rid, p))
-        for inst, (cols, slots) in per_inst.items():
-            cidx = jnp.asarray(np.concatenate(cols))
-            self.pool.pools[inst].fill_packed(
-                np.concatenate(slots),
-                jnp.take(k_packed, cidx, axis=1),
-                jnp.take(v_packed, cidx, axis=1),
-            )
-
-    def _real_prefill_serial(self, batch: PrefillBatch) -> None:
-        """Per-request fallback (recurrent/hybrid state, moe capacity)."""
-        import jax.numpy as jnp
-
-        from repro.kernels import ops
-
-        for r in batch.requests:
-            # dispatch-counted so tests/benches can assert the packed paths
-            # (incl. DoP>1 ring fusion) never fall back to serial prefill
-            ops.dispatch_counts["prefill_serial_model"] += 1
-            toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
-            logits, cache = self.model.prefill(self.params, {"tokens": toks})
-            r.output_tokens.append(self._sample_token(np.asarray(logits[0, -1])))
-            if cache.k is not None:
-                k = np.asarray(cache.k[:, 0], np.float32)  # [L, T, KVH, D]
-                v = np.asarray(cache.v[:, 0], np.float32)
-                assign = batch.placement[r.rid]
-                for inst, positions in assign.items():
-                    if positions and inst not in self.failed:
-                        self.pool.pools[inst].fill(
-                            r.rid, positions, k[:, positions], v[:, positions]
-                        )
-            if cache.ssm is not None:
-                self._real_cache[r.rid] = cache.ssm
-
-    def _real_decode(self, g: DecodeBatch) -> None:
-        if self._paged_impl is not None and self.pool.pools[0].store_values:
-            return self._real_decode_paged(g)
-        return self._real_decode_serial(g)
-
-    def _real_decode_paged(self, g: DecodeBatch) -> None:
-        """Gather-free batched decode: ONE model step for the whole group;
-        per layer, one paged-kernel launch per instance over the pool storage
-        in place (block tables), partials LSE-merged multi-master style."""
-        import jax.numpy as jnp
-
-        from repro.core.paged_decode import PagedShard
-        from repro.models.transformer import Cache
-
-        rids = [r.rid for r in g.requests]
-        n_cached = np.array([r.seq_len - 1 for r in g.requests], np.int32)
-        shards, covered = [], np.zeros(len(rids), np.int64)
-        for pool in self.pool.pools:
-            if pool.instance_id in self.failed:
-                continue
-            table, lengths = pool.block_table(rids)
-            if not lengths.any():
-                continue
-            covered += lengths
-            # pool-owned incrementally-synced mirror: steady-state decode
-            # uploads one slot per request; packed-prefill slots upload 0
-            kdev, vdev, posdev = pool.device_kv()
-            paged_shape = (pool.n_attn, pool.n_pages, pool.page_size) + kdev.shape[2:]
-            shards.append(PagedShard(
-                k_pages=kdev.reshape(paged_shape),
-                v_pages=vdev.reshape(paged_shape),
-                table=jnp.asarray(table),
-                lengths=jnp.asarray(lengths),
-                # per-slot positions are only consumed by window masking
-                pos=(posdev.reshape(pool.n_pages, pool.page_size)
-                     if self.cfg.sliding_window else None),
-            ))
-        # cache holds tokens 0..seq_len-2; the processed token's KV is
-        # produced by this step and appended at the master afterwards
-        assert (covered == n_cached).all(), (covered, n_cached)
-        toks = jnp.asarray([r.output_tokens[-1] for r in g.requests], jnp.int32)
-        cache = Cache(length=jnp.asarray(n_cached))
-        prev_impl = self.model.attn_impl
-        self.model.attn_impl = self._paged_impl
-        self._paged_impl.begin_step(shards)
-        try:
-            logits, _, kvs = self.model.decode(self.params, toks, cache)
-        finally:
-            self._paged_impl.end_step()
-            self.model.attn_impl = prev_impl
-        logits = np.asarray(logits)
-        for b, r in enumerate(g.requests):
-            r.output_tokens.append(self._sample_token(logits[b]))
-            if kvs is not None:
-                # stash; _on_decode_done fills it once the slot is allocated
-                self._pending_kv[r.rid] = (
-                    np.asarray(kvs[0][:, b], np.float32),  # [L, 1, KVH, D]
-                    np.asarray(kvs[1][:, b], np.float32),
-                )
-
-    def _real_decode_serial(self, g: DecodeBatch) -> None:
-        """Per-request fallback (recurrent/hybrid state or custom impls)."""
-        import jax.numpy as jnp
-
-        from repro.models.transformer import Cache
-
-        for r in g.requests:
-            positions, k, v = self.pool.gather_request(r.rid)
-            # cache holds tokens 0..seq_len-2; the processed token's KV is
-            # produced by this step and appended at the master afterwards
-            n_cached = r.seq_len - 1
-            if k is not None:
-                assert len(positions) == n_cached, (len(positions), n_cached)
-            cache = Cache(
-                k=jnp.asarray(k[:, None].astype(self.model.dtype)) if k is not None else None,
-                v=jnp.asarray(v[:, None].astype(self.model.dtype)) if v is not None else None,
-                length=jnp.asarray([n_cached], jnp.int32),
-                ssm=self._real_cache.get(r.rid),
-            )
-            last_tok = r.output_tokens[-1]
-            logits, new_cache, kvs = self.model.decode(
-                self.params, jnp.asarray([last_tok], jnp.int32), cache
-            )
-            r.output_tokens.append(self._sample_token(np.asarray(logits[0])))
-            if new_cache.ssm is not None:
-                self._real_cache[r.rid] = new_cache.ssm
-            if kvs is not None:
-                # stash; _on_decode_done fills it once the slot is allocated
-                self._pending_kv[r.rid] = (
-                    np.asarray(kvs[0][:, 0], np.float32),  # [L, 1, KVH, D]
-                    np.asarray(kvs[1][:, 0], np.float32),
-                )
+    def _apply_join(self, inst: int) -> None:
+        super()._apply_join(inst)
+        # newly-grown pools need their mirror pinned to a data-shard device
+        # under the mesh executor (no-op for LocalExecutor)
+        if self.executor is not None and hasattr(self.executor, "_bind_pool_devices"):
+            self.executor._bind_pool_devices()
 
     def _apply_failure(self, inst: int) -> None:
         super()._apply_failure(inst)

@@ -52,9 +52,16 @@ _DEFAULT_IMPL = _impl_from_env()
 
 dispatch_counts: Counter = Counter()
 
+# communication accounting (bytes, per entry point): ring ppermute legs are
+# counted at trace time from their (static) per-rank payload shapes, so one
+# compile of an SPMD program yields the exact per-leg byte volume without
+# instrumenting the runtime.
+comm_bytes: Counter = Counter()
+
 
 def reset_dispatch_counts() -> None:
     dispatch_counts.clear()
+    comm_bytes.clear()
 
 
 def set_default_impl(impl: str) -> None:
@@ -162,6 +169,21 @@ def prefill_ring_chunk(
         window=window, softcap=softcap, block_q=block_q, block_k=block_k,
         interpret=(impl == "interpret"),
     )
+
+
+def ring_ppermute(operands, axis_name: str, pairs):
+    """`lax.ppermute` wrapper for the SPMD prefill ring: forwards the KV
+    chunk (and its per-shard offsets / any carried metadata) to the ring
+    neighbour, counting one dispatch and the exact per-rank payload bytes
+    (shapes are static inside the shard_map body, so trace-time accounting
+    is exact).  Every ring leg of the mesh executor goes through here so
+    tests and benchmarks can assert/record the communication volume."""
+    dispatch_counts["ring_ppermute"] += 1
+    leaves = jax.tree_util.tree_leaves(operands)
+    comm_bytes["ring_ppermute"] += sum(
+        int(x.size) * jnp.dtype(x.dtype).itemsize for x in leaves
+    )
+    return jax.lax.ppermute(operands, axis_name, pairs)
 
 
 def paged_decode_partial(

@@ -42,6 +42,13 @@ reconstructed as ``j * n + shard`` — so tile skipping still works: a q/k tile
 pair is skipped when its global causal reach, segment ranges, or window reach
 cannot interact.  After n steps the carried state finalizes to exactly the
 single-launch packed result (same math, chunked).
+
+Deployment note: the in-process replay (LocalExecutor) passes static shard
+ids, so this Pallas kernel applies directly; the shard_map mesh path
+(`core.esp.ring_packed_prefill_spmd`) has TRACED shard ids (lax.axis_index)
+and therefore uses the banded XLA fallback (`ref.packed_prefill_ring_chunk_
+banded`, which takes shard ids as jnp values) — per-rank specialization of
+this kernel on TPU is a ROADMAP item.
 """
 from __future__ import annotations
 

@@ -9,6 +9,37 @@ import jax.numpy as jnp
 from repro.models import attention as A
 
 
+def serial_decode_oracle(model, params, prompt, n_decode: int) -> list:
+    """Greedy token oracle for engine parity tests/demos: one serial
+    prefill over `prompt` followed by ``n_decode`` dense-cache decode steps
+    (argmax sampling, KV appended in place).  Returns the ``n_decode + 1``
+    emitted token ids — what a real-mode engine must reproduce exactly."""
+    import numpy as np
+
+    toks = jnp.asarray(np.asarray(prompt)[None], jnp.int32)
+    logits, cache = model.prefill(params, {"tokens": toks})
+    nxt = int(np.argmax(np.asarray(logits[0, -1])))
+    out = [nxt]
+    n_in = len(prompt)
+    s_max = n_in + n_decode + 2
+    k_pad = jnp.zeros((cache.k.shape[0], 1, s_max) + cache.k.shape[3:],
+                      cache.k.dtype).at[:, :, :n_in].set(cache.k)
+    v_pad = jnp.zeros_like(k_pad).at[:, :, :n_in].set(cache.v)
+    cache = cache._replace(k=k_pad, v=v_pad)
+    for _ in range(n_decode):
+        logits, cache, kvs = model.decode(
+            params, jnp.asarray([nxt], jnp.int32), cache
+        )
+        pos = int(cache.length[0]) - 1
+        cache = cache._replace(
+            k=cache.k.at[:, :, pos : pos + 1].set(kvs[0]),
+            v=cache.v.at[:, :, pos : pos + 1].set(kvs[1]),
+        )
+        nxt = int(np.argmax(np.asarray(logits[0])))
+        out.append(nxt)
+    return out
+
+
 def striped_flash_attention_ref(
     q, k, v, q_pos, k_pos, *, causal=True, window=None, softcap=None
 ):

@@ -44,8 +44,8 @@ checkpointing); ``host_syncs`` counts those forced downloads and the
 ``mirror_full_syncs``/``mirror_uploaded_slots`` counters let tests and
 benchmarks assert the zero-re-upload invariant.
 
-Ring-step KV ownership (DoP>1 ESP prefill)
-------------------------------------------
+Ring-step KV ownership (DoP>1 ESP prefill) — see DESIGN.md §6
+-------------------------------------------------------------
 Under the fused striped ring, the packed token axis of a prefill batch is
 striped across the group's instances (global packed column ``g`` belongs to
 instance ``g % n``); each ring step circulates the KV *chunks* between
@@ -57,6 +57,13 @@ group's slots BEFORE the ring runs, the ring pass deposits each column at
 its final home as a side effect of computation, and no post-hoc migration of
 the dropped instances' shards is ever needed (their columns were simply
 never assigned to them).
+
+Under the mesh executor the mirror is additionally PINNED to the instance's
+own data-shard device (``bind_device``): ownership is physical device
+residency, and ``fill_packed``'s scatter runs where the stripe lives.
+Checkpoints snapshot occupied-slot KV values from the host copy (forcing
+the deferred stale-slot download exactly once); restore drops the mirror
+and rebuilds it from host on the bound device.
 """
 from __future__ import annotations
 
@@ -173,6 +180,7 @@ class KVPool:
         self._dirty: List[np.ndarray] = []
         self._dirty_count = 0
         self._mirror = None  # (k_dev, v_dev, slot_pos_dev) jax arrays
+        self.device = None  # mirror placement: None = process default device
         self.mirror_full_syncs = 0
         self.mirror_uploaded_slots = 0
         # lazy host copy: slots whose authoritative KV lives only in the
@@ -426,6 +434,28 @@ class KVPool:
         self._mark_dirty(slots)
 
     # --------------------------------------------------------- device mirror
+    def bind_device(self, device) -> None:
+        """Pin this instance's compute-plane mirror to `device` — under the
+        mesh executor, data-shard device i of the ("data", "model") mesh, so
+        the instance PHYSICALLY owns its KV stripe: `fill_packed`
+        write-through lands the ring pass's reserved placement columns on
+        this device, and the paged decode partial over this pool runs here.
+        Rebinding drops the mirror (next `device_kv()` rebuilds in place)."""
+        if device is not self.device:
+            if self._mirror is not None:
+                self._sync_host()  # keep fill_packed KV across the rebind
+            self.device = device
+            self.drop_mirror()
+
+    def _dev_put(self, x):
+        """Upload to the bound device (process default when unbound)."""
+        import jax
+        import jax.numpy as jnp
+
+        if self.device is None:
+            return jnp.asarray(x)
+        return jax.device_put(jnp.asarray(x), self.device)
+
     def device_kv(self):
         """Incrementally-synced device mirror of the (K, V, slot_pos)
         storage.  Steady-state decode uploads only the slots written since
@@ -442,8 +472,8 @@ class KVPool:
             # stale-host slots (authoritative only in the mirror) down first
             # or their KV would be overwritten with never-synced host data
             self._sync_host()
-            cur = (jnp.asarray(self.k), jnp.asarray(self.v),
-                   jnp.asarray(self.slot_pos))
+            cur = (self._dev_put(self.k), self._dev_put(self.v),
+                   self._dev_put(self.slot_pos))
             self.mirror_full_syncs += 1
             self.mirror_uploaded_slots += self.capacity
         elif len(dirty):
@@ -451,9 +481,9 @@ class KVPool:
             bucket = _pad_bucket(n)
             idx = np.concatenate([dirty, np.full(bucket - n, dirty[-1])])
             cur = _mirror_scatter()(
-                cur[0], cur[1], cur[2], jnp.asarray(idx),
-                jnp.asarray(self.k[:, idx]), jnp.asarray(self.v[:, idx]),
-                jnp.asarray(self.slot_pos[idx]),
+                cur[0], cur[1], cur[2], self._dev_put(idx),
+                self._dev_put(self.k[:, idx]), self._dev_put(self.v[:, idx]),
+                self._dev_put(self.slot_pos[idx]),
             )
             self.mirror_uploaded_slots += n
         self._mirror = cur
@@ -491,14 +521,18 @@ class KVPool:
         kd, vd, pd = self.device_kv()  # sync any stale dirty slots first
         bucket = _pad_bucket(n)
         idx = np.concatenate([slots, np.full(bucket - n, slots[-1])])
-        kn, vn = jnp.asarray(k_dev, kd.dtype), jnp.asarray(v_dev, vd.dtype)
+        # the packed step's output may live on another device (or be sharded
+        # across the mesh): pull exactly this instance's columns to ITS
+        # device so the scatter runs where the stripe lives
+        kn = self._dev_put(jnp.asarray(k_dev, kd.dtype))
+        vn = self._dev_put(jnp.asarray(v_dev, vd.dtype))
         if bucket > n:
             reps = (1, bucket - n) + (1,) * (kn.ndim - 2)
             kn = jnp.concatenate([kn, jnp.tile(kn[:, -1:], reps)], axis=1)
             vn = jnp.concatenate([vn, jnp.tile(vn[:, -1:], reps)], axis=1)
         self._mirror = _mirror_scatter()(
-            kd, vd, pd, jnp.asarray(idx), kn, vn,
-            jnp.asarray(self.slot_pos[idx]),
+            kd, vd, pd, self._dev_put(idx), kn, vn,
+            self._dev_put(self.slot_pos[idx]),
         )
         # lazy host copy: defer the device->host download to the first
         # management-plane read (migration / gather / SWA / checkpoint)
@@ -562,9 +596,7 @@ class KVPool:
 
     # ------------------------------------------------------- checkpointing
     def state_dict(self) -> Dict[str, object]:
-        if self.store_values:
-            self._sync_host()  # checkpoints snapshot the host copy
-        return {
+        state: Dict[str, object] = {
             "free_pages": self._free_pages.copy(),
             "n_free_pages": self._n_free_pages,
             "used_tokens": self._used_tokens,
@@ -574,6 +606,18 @@ class KVPool:
                 for rid, st in self._reqs.items()
             },
         }
+        if self.store_values:
+            # checkpoints snapshot the host copy: force the deferred
+            # device->host download of fill_packed slots (counted in
+            # `host_syncs`; at most once — a second snapshot with nothing
+            # stale downloads nothing), then persist only OCCUPIED slots so
+            # the checkpoint scales with live KV, not pool capacity.
+            self._sync_host()
+            occ = np.nonzero(self.slot_pos >= 0)[0]
+            state["kv_slots"] = occ
+            state["k"] = self.k[:, occ].copy()
+            state["v"] = self.v[:, occ].copy()
+        return state
 
     def load_state_dict(self, state: Dict[str, object]) -> None:
         self._free_pages = state["free_pages"].copy()
@@ -586,6 +630,15 @@ class KVPool:
             st.append_pages(np.asarray(pages, np.int32))
             st.append_pos(np.asarray(pos, np.int64))
             self._reqs[rid] = st
+        if self.store_values and "kv_slots" in state:
+            # real-mode restore reproduces the oracle sequence without a
+            # recompute pass: the host copy is authoritative again and the
+            # dropped (per-shard) mirror rebuilds from it on first use
+            self.k[:] = 0.0
+            self.v[:] = 0.0
+            occ = state["kv_slots"]
+            self.k[:, occ] = state["k"]
+            self.v[:, occ] = state["v"]
         self.drop_mirror()
 
     def evict(self, request_id: int) -> int:

@@ -103,11 +103,14 @@ def _dot_flops(line: str, out_shape: str, name_shapes: Dict[str, str]) -> float:
     out_n = 1
     for d in out_dims:
         out_n *= d
-    mo = re.search(r"dot\(\s*%?([\w\.\-]+)\s*,", line)
+    # two HLO text flavors: `dot(%lhs, %rhs)` (operand names only) and
+    # `dot(f32[2,64]{1,0} %lhs, ...)` (inline operand shapes, newer XLA) —
+    # prefer the inline shape, fall back to the name table
+    mo = re.search(r"dot\(\s*(?:(\w+\[[\d,]*\])\S*\s+)?%?([\w\.\-]+)\s*,", line)
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     if not mo or not mc:
         return 2.0 * out_n  # degenerate
-    lhs_shape = name_shapes.get(mo.group(1))
+    lhs_shape = mo.group(1) or name_shapes.get(mo.group(2))
     if lhs_shape is None:
         return 2.0 * out_n
     _, lhs_dims = _shape_dims(lhs_shape)

@@ -1,0 +1,217 @@
+"""Mesh-executor test bodies, run in a multi-device subprocess.
+
+`tests/test_mesh_executor.py` launches each case as
+``python tests/mesh_exec_cases.py <case>`` with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process keeps the default single device); a case prints ``<CASE>-OK`` on
+success.  Kept as plain functions (not pytest tests) so failures surface
+full tracebacks through the subprocess assert.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY, reduced
+from repro.core import esp, striped
+from repro.engine.request import Phase, Request
+from repro.engine.server import LoongServeEngine
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.launch.mesh import make_test_mesh
+from repro.manager.scheduler import PrefillBatch
+from repro.models import build_model
+
+CFG = reduced(REGISTRY["lwm-7b"])
+
+
+def _packed_case(seed, lens, h, kvh, d, bucket):
+    rng = np.random.default_rng(seed)
+    total = sum(lens)
+    assert total <= bucket
+    off = np.full(len(lens) + 1, total, np.int32)
+    off[0] = 0
+    c = 0
+    for i, n in enumerate(lens):
+        c += n
+        off[i + 1] = c
+    q = rng.normal(size=(bucket, h, d)).astype(np.float32)
+    k = rng.normal(size=(bucket, kvh, d)).astype(np.float32)
+    v = rng.normal(size=(bucket, kvh, d)).astype(np.float32)
+    return q, k, v, off
+
+
+def case_ring_parity():
+    """shard_map ring prefill == dense packed oracle, bit-for-bit at the
+    test_ring_prefill tolerance, for DoP {2, 4} x {GQA, sliding window,
+    logit softcap} x {double-buffered, sequential}, with a model axis on the
+    mesh (attention replicated over it) and without."""
+    lens = [5, 1, 17, 9, 12]
+    h, kvh, d = 4, 2, 32
+    q, k, v, off = _packed_case(0, lens, h, kvh, d, bucket=64)
+    total = sum(lens)
+    dense = {}
+    for window, softcap in [(None, None), (7, None), (None, 5.0)]:
+        dense[(window, softcap)] = np.asarray(kref.packed_prefill_ref(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(off),
+            window=window, softcap=softcap,
+        ))
+    for dop in (2, 4):
+        for model_ax in (1, 2):
+            mesh = make_test_mesh(data=dop, model=model_ax)
+            for (window, softcap), want in dense.items():
+                for db in (True, False):
+                    out = np.asarray(jax.jit(
+                        lambda q, k, v, o: esp.ring_packed_prefill_spmd(
+                            mesh, q, k, v, o, window=window, softcap=softcap,
+                            max_seq_len=32, block_q=8, block_k=8,
+                            double_buffer=db,
+                        )
+                    )(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                      jnp.asarray(off)))
+                    np.testing.assert_allclose(
+                        out[:total], want[:total], atol=2e-5,
+                        err_msg=str((dop, model_ax, window, softcap, db)),
+                    )
+    # provenance closed form == the simulated ppermute schedule
+    for n, g in [(2, None), (4, None), (8, 4)]:
+        sched = striped.ring_chunk_schedule(n, g)
+        for s in range(g or n):
+            assert striped.chunk_provenance(n, s, g) == sched[s], (n, g, s)
+    print("RING-PARITY-OK")
+
+
+def _prefill_batch(eng, rng, lengths, rid0=0, max_new=8):
+    n_inst = len(eng.pool.pools)
+    reqs, placement = [], {}
+    for j, ln in enumerate(lengths):
+        n = int(ln)
+        r = Request(input_len=n, max_new_tokens=max_new,
+                    prompt=rng.integers(0, eng.cfg.vocab_size, n).tolist())
+        r.rid, r.phase = rid0 + j, Phase.PREFILL
+        plan = eng.pool.plan_placement(r.rid, list(range(n)), range(n_inst))
+        eng.pool.place(plan)
+        placement[r.rid] = plan.assignment
+        reqs.append(r)
+    return PrefillBatch(reqs, list(range(n_inst)),
+                        scale_down_to=list(range(n_inst)),
+                        placement=placement)
+
+
+def _oracle_tokens(model, params, r, n_decode):
+    return kref.serial_decode_oracle(model, params, r.prompt, n_decode)
+
+
+def case_engine_e2e():
+    """Engine through the MeshExecutor at DoP {2, 4}: shard_map ring prefill
+    with ZERO serial dispatches and ZERO in-process ring-replay calls, KV
+    write-through onto per-instance devices with zero mirror re-uploads,
+    paged decode across the per-device mirrors, token sequences == serial
+    dense oracle."""
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    for dop in (2, 4):
+        mesh = make_test_mesh(data=dop, model=8 // dop)
+        eng = LoongServeEngine(CFG, dop, 4000, store_values=True, model=model,
+                               params=params, page_size=16, mesh=mesh)
+        assert type(eng.executor).__name__ == "MeshExecutor"
+        devs = {str(p.device) for p in eng.pool.pools}
+        assert len(devs) == dop, devs  # one mirror device per instance
+        rng = np.random.default_rng(23 + dop)
+        batch = _prefill_batch(eng, rng, [33, 17, 50, 8], max_new=4)
+        reqs = list(batch.requests)
+        for pool in eng.pool.pools:
+            pool.device_kv()
+            pool.mirror_uploaded_slots = 0
+            pool.mirror_full_syncs = 0
+        ops.reset_dispatch_counts()
+        eng._on_prefill_done(batch)
+        d = dict(ops.dispatch_counts)
+        assert d.get("prefill_serial_model", 0) == 0, d
+        assert d.get("prefill_ring_replay", 0) == 0, d
+        assert d.get("prefill_ring_spmd", 0) >= 1, d
+        assert d.get("ring_ppermute", 0) == dop - 1, d  # legs per trace
+        assert any(key[3] == dop for key in eng._prefill_programs)
+        for pool in eng.pool.pools:
+            assert pool.mirror_uploaded_slots == 0  # write-through, in place
+            assert pool.mirror_full_syncs == 0
+            assert pool.dirty_slot_count() == 0
+            assert pool.host_syncs == 0  # critical path stayed device-only
+        eng._push(eng.clock, "join", 0)
+        m = eng.run()
+        assert len(m.finished) == len(reqs)
+        assert ops.dispatch_counts.get("prefill_serial_model", 0) == 0
+        assert ops.dispatch_counts.get("prefill_ring_replay", 0) == 0
+        for r in reqs:
+            want = _oracle_tokens(model, params, r, 3)
+            assert want == r.output_tokens, (dop, r.rid, want, r.output_tokens)
+    print("ENGINE-E2E-OK")
+
+
+def case_checkpoint_restore():
+    """Checkpoint/restore under the sharded mirror: the checkpoint resyncs
+    the stale (fill_packed) host slots exactly ONCE per pool (`host_syncs`),
+    restore drops every per-shard device mirror, and the restored engine
+    finishes decode reproducing the serial-oracle token sequence (mirrors
+    rebuilt from the host copy on their own devices)."""
+    import tempfile
+
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    dop = 2
+    mesh = make_test_mesh(data=dop, model=8 // dop)
+
+    def fresh():
+        return LoongServeEngine(CFG, dop, 4000, store_values=True,
+                                model=model, params=params, page_size=16,
+                                mesh=mesh)
+
+    eng = fresh()
+    rng = np.random.default_rng(29)
+    batch = _prefill_batch(eng, rng, [21, 42, 13], max_new=4)
+    reqs = list(batch.requests)
+    eng._on_prefill_done(batch)  # ring prefill: host copies now stale
+    for pool in eng.pool.pools:
+        assert pool.stale_host_slot_count() > 0 and pool.host_syncs == 0
+    with tempfile.NamedTemporaryFile(suffix=".ckpt") as f:
+        eng.checkpoint(f.name)
+        for pool in eng.pool.pools:
+            # the snapshot pulled each pool's stale slots down exactly once
+            assert pool.host_syncs == 1, pool.host_syncs
+            assert pool.stale_host_slot_count() == 0
+        eng.checkpoint(f.name)  # nothing stale -> no second sync
+        for pool in eng.pool.pools:
+            assert pool.host_syncs == 1, pool.host_syncs
+
+        eng2 = fresh()
+        eng2.restore(f.name)
+        for pool in eng2.pool.pools:
+            assert pool._mirror is None  # per-shard device_kv dropped
+            assert pool.stale_host_slot_count() == 0
+            assert pool.device is not None  # binding survives the restore
+        # the restored engine owns the request objects from the snapshot
+        restored = {r.rid: r for g in eng2.ready_decode for r in g.requests}
+        assert set(restored) == {r.rid for r in reqs}
+        eng2._push(eng2.clock, "join", 0)
+        m = eng2.run()
+        assert len(m.finished) == len(reqs)
+        for r in reqs:
+            want = _oracle_tokens(model, params, r, 3)
+            got = restored[r.rid].output_tokens
+            assert want == got, (r.rid, want, got)
+    print("CHECKPOINT-RESTORE-OK")
+
+
+CASES = {
+    "ring_parity": case_ring_parity,
+    "engine_e2e": case_engine_e2e,
+    "checkpoint_restore": case_checkpoint_restore,
+}
+
+
+if __name__ == "__main__":
+    CASES[sys.argv[1]]()
