@@ -707,6 +707,43 @@ def bench_prefill_spmd(quick: bool = False):
     _row("prefill_spmd", float(us), derived)
 
 
+# ------------------------------------------------ SPMD mesh-executor decode
+
+
+def bench_decode_spmd(quick: bool = False):
+    """Mesh-executor decode on an 8-virtual-device host mesh: the whole
+    batched decode iteration as ONE shard_map program whose per-layer
+    LSE-merge is a pmax+psum collective — overlapped vs barriered vs the
+    per-shard Python loop with explicit device hops — plus per-iteration
+    collective payload bytes and structural StableHLO overlap evidence.
+    Runs in a subprocess because the device-count XLA flag must be set
+    before jax initializes.  Writes BENCH_decode_spmd.json."""
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).parent.parent
+    # the child module self-appends the 8-device XLA flag before jax
+    # initializes; only PYTHONPATH needs to be threaded through here
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    cmd = [sys.executable, "-m", "benchmarks.decode_spmd"]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, env=env, cwd=root, capture_output=True,
+                         text=True, timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(out.stdout + "\n" + out.stderr)
+    row = next(
+        ln for ln in out.stdout.splitlines() if ln.startswith("decode_spmd,")
+    )
+    _, us, derived = row.split(",", 2)
+    _row("decode_spmd", float(us), derived)
+
+
 # -------------------------------------------------------------- roofline
 
 
@@ -754,12 +791,13 @@ BENCHES = {
     "prefill": bench_prefill_packed,
     "prefill_ring": bench_prefill_ring,
     "prefill_spmd": bench_prefill_spmd,
+    "decode_spmd": bench_decode_spmd,
     "roofline": bench_roofline_summary,
 }
 
 # CI smoke: the engine hot paths (quick mode, *_quick.json artifacts);
 # failures are fatal so the benchmark paths can't silently rot.
-SMOKE = ("decode", "prefill", "prefill_ring", "prefill_spmd")
+SMOKE = ("decode", "prefill", "prefill_ring", "prefill_spmd", "decode_spmd")
 
 
 def main() -> None:

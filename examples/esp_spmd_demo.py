@@ -2,8 +2,10 @@
 host devices — the DoP>1 packed ring prefill as a real shard_map program
 (each elastic instance physically owns its KV stripe on its own device,
 stripes rotating via ppermute, double-buffered against chunk compute),
-followed by multi-master paged decode over the per-device pool mirrors —
-validated token-for-token against the serial dense oracle.
+followed by SPMD multi-master paged decode: one shard_map program per
+iteration over the per-device pool mirrors, each layer's LSE-merge a
+pmax+psum collective — validated token-for-token against the serial dense
+oracle.
 
   PYTHONPATH=src python examples/esp_spmd_demo.py
 (sets XLA_FLAGS itself — run as a fresh process)
@@ -74,9 +76,16 @@ def main():
     print("write-through: 0 mirror slots re-uploaded (KV landed on each "
           "instance's own device during the ring pass)")
 
+    ops.reset_dispatch_counts()
     eng._push(eng.clock, "join", 0)  # kick the scheduler; decode to finish
     m = eng.run()
     assert len(m.finished) == len(reqs)
+    d = dict(ops.dispatch_counts)
+    assert d.get("decode_merge_loop", 0) == 0, d  # no per-shard Python loop
+    assert d.get("paged_decode_spmd", 0) >= 1, d
+    print(f"spmd decode: {d.get('paged_decode_spmd', 0)} collective "
+          f"LSE-merges/trace ({ops.comm_bytes.get('psum', 0)} psum bytes), "
+          "zero per-shard loop merges")
 
     # token-exact vs the serial dense oracle (prefill + N_DECODE decodes)
     from repro.kernels.ref import serial_decode_oracle

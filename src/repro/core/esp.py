@@ -230,6 +230,88 @@ def ring_packed_prefill_spmd(
     return striped.unstripe(out, n, axis=0)
 
 
+def paged_decode_spmd(
+    mesh: Mesh, q, k_new, v_new, query_pos,
+    k_pages, v_pages, table, lengths, page_pos=None, *,
+    sp_axis: str = "data",
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    overlap: bool = True,
+):
+    """One decode layer's multi-master paged attention as ONE shard_map
+    region over the mesh's ``sp_axis``: each data rank computes its
+    `ops.paged_decode_partial` over the pool mirror it physically holds (the
+    sharded ``k_pages``/``v_pages`` operand IS the per-rank mirror — no KV
+    ever moves), and the LSE-merge of the per-instance partials is a
+    collective on the weighted running accumulator:
+
+        M   = pmax(m)                       (tiny [B, 1, H])
+        o_s = psum(o · exp(m - M))          (the paper's "send back partial
+        l_s = psum(l · exp(m - M))           results", §4.2, as ONE reduce)
+
+    The query rides in replicated (``in_specs=P(None)``): the q broadcast is
+    compiled into the program instead of a per-shard `device_put` loop.  The
+    new token's own KV partial (computed master-side, outside the manual
+    region) is data-independent of the reduce, so with ``overlap=True``
+    (default, no barriers anywhere) XLA's scheduler is free to run the
+    all-reduce asynchronously against it — and, because the whole decode
+    iteration is one program, against any other independent compute in the
+    layer stack (e.g. the next layer's weight loads feeding its QKV dot).
+    ``overlap=False`` pins the collective with an `optimization_barrier`
+    threading both the merge results and the new-token partial's inputs —
+    nothing can be scheduled across the reduce (the sequential baseline the
+    benchmark compares against, mirroring the prefill ring's
+    ``double_buffer=False`` arm).
+
+    q [B, 1, H, D]; k_new/v_new [B, 1, KVH, D]; query_pos [B] (the token's
+    global position == cached length); k_pages/v_pages
+    [n, n_pages, P, KVH, D] — one LAYER's paged storage, sharded over
+    ``sp_axis`` (leading axis = rank); table [n, B, max_pages];
+    lengths [n, B]; page_pos [n, n_pages, P] (only with window).  Returns
+    the finalized merged output [B, 1, H, D] f32."""
+    from repro.kernels import ops
+
+    n = int(mesh.shape[sp_axis])
+    assert int(k_pages.shape[0]) == n, (k_pages.shape, n)
+    ops.dispatch_counts["paged_decode_spmd"] += 1
+    sp = sp_axis
+    has_pos = page_pos is not None
+
+    def body(qb, qp, kb, vb, tb, lb, *pb):
+        # kb/vb/tb/lb/pb: this rank's mirror view, leading shard dim 1
+        part = ops.paged_decode_partial(
+            qb, kb[0], vb[0], tb[0], lb[0], pb[0][0] if has_pos else None,
+            query_pos=qp, window=window, softcap=softcap, impl="xla",
+        )
+        m_g = ops.pmax(part.m, sp)
+        m_safe = jnp.where(jnp.isinf(m_g), 0.0, m_g)
+        w = jnp.where(jnp.isinf(part.m), 0.0, jnp.exp(part.m - m_safe))
+        o_s, l_s = ops.psum((part.o * w[..., None], part.l * w), sp)
+        return o_s, m_g, l_s
+
+    specs = [P(None), P(None), P(sp), P(sp), P(sp), P(sp)]
+    args = [q, jnp.asarray(query_pos, jnp.int32), k_pages, v_pages,
+            table, lengths]
+    if has_pos:
+        specs.append(P(sp))
+        args.append(page_pos)
+    fn = _shmap(
+        body, mesh, in_specs=tuple(specs),
+        out_specs=(P(None), P(None), P(None)),
+    )
+    o_s, m_s, l_s = fn(*args)
+    if not overlap:
+        # barriered baseline: the reduce is pinned on the critical path —
+        # even the new-token partial (whose inputs are threaded through the
+        # barrier) must wait for it
+        o_s, m_s, l_s, q, k_new, v_new = lax.optimization_barrier(
+            (o_s, m_s, l_s, q, k_new, v_new)
+        )
+    p_new = A.partial_attention(q, k_new, v_new, None, softcap=softcap)
+    merged = A.merge_partial(A.Partial(o_s, m_s, l_s), p_new)
+    return A.finalize_partial(merged)
+
+
 class ESPAttnImpl(DefaultAttnImpl):
     def __init__(
         self,

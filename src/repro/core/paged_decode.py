@@ -9,14 +9,29 @@ the instance's pool storage in place, routed by per-request block tables —
 then merges the per-instance partials with the new token's own KV partial.
 No dense per-request gather, and launch count is independent of batch size.
 
+Two merge deployments behind the same arming call, mirroring the prefill
+impl's ring split:
+
+  * per-shard loop (default): partials are merged sequentially in Python;
+    under per-device pool mirrors the query ships out to each shard's device
+    and only the tiny (o, m, l) partial rides home (both transfers counted
+    in `ops.comm_bytes`).  Every merge is a host-driven sync point.
+  * SPMD (``mesh=``, the mesh executor): the layer's merge runs as ONE
+    shard_map region over the mesh's "data" axis — each rank's pool mirror
+    is the local shard of the sharded paged operand, and the LSE-merge is a
+    `pmax`+`psum` on the weighted (o·exp(m-M), l·exp(m-M)) accumulator
+    (`core.esp.paged_decode_spmd`), schedulable by XLA against independent
+    compute unless ``overlap=False`` pins it behind a barrier.
+
 The impl subclasses `DefaultAttnImpl`, so outside a `begin_step`/`end_step`
 window (e.g. prefill, or oracle-style dense decode with an explicit cache) it
 behaves exactly like the default dense math.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Union
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
@@ -25,7 +40,7 @@ from repro.models.transformer import DefaultAttnImpl
 
 
 class PagedShard(NamedTuple):
-    """One instance's share of a decode batch.
+    """One instance's share of a decode batch (per-shard loop mode).
 
     k_pages/v_pages: [n_attn, n_pages, P, KVH, D] device mirror of the
     instance's pool storage; table/lengths: that pool's block table for the
@@ -39,23 +54,94 @@ class PagedShard(NamedTuple):
     pos: Optional[jnp.ndarray] = None
 
 
+class SpmdPagedShards(NamedTuple):
+    """The whole group's shards as ONE mesh-sharded operand set (SPMD mode):
+    leading axis = data rank, each rank's slice aliasing its own pool mirror
+    (`KVPool.device_paged_kv` + `jax.make_array_from_single_device_arrays`
+    assembly in the mesh executor — zero KV movement).
+
+    k_pages/v_pages: [n, n_attn, n_pages, P, KVH, D]; table
+    [n, B, max_pages]; lengths [n, B]; pos [n, n_pages, P] (window only)."""
+
+    k_pages: jnp.ndarray
+    v_pages: jnp.ndarray
+    table: jnp.ndarray
+    lengths: jnp.ndarray
+    pos: Optional[jnp.ndarray] = None
+
+
+def _ship(x, dev, key: str):
+    """`jax.device_put` with comm accounting: the per-shard loop's explicit
+    cross-device hops (q broadcast out, partial home) stay visible to
+    benchmarks via `ops.comm_bytes[key]` — shapes are concrete here, so the
+    byte count is exact."""
+    ops.count_transfer(key, x)
+    return jax.device_put(x, dev)
+
+
+def _dev(x):
+    try:  # concrete arrays only — tracers have no .devices()
+        return next(iter(x.devices()))
+    except Exception:
+        return None
+
+
 class PagedDecodeAttnImpl(DefaultAttnImpl):
     """Batched paged decode attention across elastic instances."""
 
     def __init__(self, impl: Optional[str] = None):
-        self._shards: Optional[List[PagedShard]] = None
+        self._shards: Optional[
+            Union[List[PagedShard], SpmdPagedShards]
+        ] = None
         self._layer = 0
+        self._n_planes: Optional[int] = None
+        self._mesh = None  # SPMD mode: shard_map merge (esp.paged_decode_spmd)
+        self._overlap = True
         self._impl = impl  # kernel impl override (None -> ops default)
 
-    def begin_step(self, shards: List[PagedShard]) -> None:
+    def begin_step(self, shards, *, mesh=None, overlap: bool = True) -> None:
         """Arm the paged path for one decode iteration.  decode_attn is
         called once per layer in stack order; the layer cursor indexes the
-        per-layer storage planes."""
+        per-layer storage planes.  With ``mesh=`` the shards must be one
+        `SpmdPagedShards` (mesh-sharded over "data") and the per-layer merge
+        runs as one shard_map collective; ``overlap=False`` pins that
+        collective behind an optimization barrier (benchmark baseline)."""
         self._shards = shards
         self._layer = 0
+        self._mesh = mesh
+        self._overlap = overlap
+        if mesh is not None:
+            assert isinstance(shards, SpmdPagedShards), type(shards)
+            self._n_planes = int(shards.k_pages.shape[1])
+        else:
+            # all shards mirror the same layer stack; an empty shard list
+            # (no KV anywhere) leaves the cursor unverified
+            self._n_planes = (
+                int(shards[0].k_pages.shape[0]) if shards else None
+            )
 
     def end_step(self) -> None:
-        self._shards = None
+        """Disarm — and verify the layer cursor consumed EXACTLY the armed
+        per-layer planes: a model/impl stack-order mismatch (extra or missing
+        decode_attn calls) would otherwise read the wrong layer's pages
+        silently.  Callers disarm from ``finally`` blocks, so the check is
+        skipped while another exception is already propagating (a model
+        error at layer k must stay the headline failure, not the cursor)."""
+        import sys
+
+        try:
+            if (self._shards is not None and self._n_planes is not None
+                    and sys.exc_info()[0] is None):
+                assert self._layer == self._n_planes, (
+                    f"paged decode consumed {self._layer} layer planes, "
+                    f"pool stores {self._n_planes}"
+                )
+        finally:
+            self._shards = None
+            self._mesh = None
+            self._n_planes = None
+            self._layer = 0
+            self._overlap = True
 
     def decode_attn(self, q, k_cache, v_cache, k_new, v_new, cache_len, *,
                     window, softcap):
@@ -66,22 +152,32 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
             )
         li = self._layer
         self._layer += 1
+        if self._n_planes is not None:
+            assert li < self._n_planes, (
+                f"decode_attn called for layer {li} but the pool stores "
+                f"{self._n_planes} planes (model/impl stack mismatch)"
+            )
         b = q.shape[0]
         # the query's global position == cached token count (its own KV is
         # k_new, merged below) — window predicate qp - kp < window
         qpos = jnp.broadcast_to(jnp.asarray(cache_len), (b,)).astype(jnp.int32)
+        if self._mesh is not None:
+            from repro.core.esp import paged_decode_spmd
+
+            s = self._shards
+            out = paged_decode_spmd(
+                self._mesh, q, k_new, v_new, qpos,
+                s.k_pages[:, li], s.v_pages[:, li], s.table, s.lengths,
+                s.pos, window=window, softcap=softcap,
+                overlap=self._overlap,
+            )
+            return out.astype(q.dtype)
         part = attn.partial_attention(q, k_new, v_new, None, softcap=softcap)
         # the master device the per-shard partials return to (the paper's
         # "send back partial results"): pool mirrors bound to their own
         # data-shard devices (mesh executor) compute each partial in place
         # over the shard and only the tiny (o, m, l) rides home for the
         # LSE-merge.  Single-device pools skip the transfer entirely.
-        def _dev(x):
-            try:  # concrete arrays only — tracers have no .devices()
-                return next(iter(x.devices()))
-            except Exception:
-                return None
-
         home = _dev(q)
         for s in self._shards:
             sdev = _dev(s.k_pages)
@@ -90,10 +186,8 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
                 # the q broadcast: ship the tiny query (and its positions)
                 # to the shard's device so the partial computes WHERE the KV
                 # stripe lives
-                import jax
-
-                q_s = jax.device_put(q, sdev)
-                qpos_s = jax.device_put(qpos, sdev)
+                q_s = _ship(q, sdev, "decode_q_broadcast")
+                qpos_s = _ship(qpos, sdev, "decode_q_broadcast")
             p = ops.paged_decode_partial(
                 q_s, s.k_pages[li], s.v_pages[li], s.table, s.lengths, s.pos,
                 query_pos=qpos_s, window=window, softcap=softcap,
@@ -101,8 +195,11 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
             )
             if home is not None and sdev is not None and sdev != home:
                 # only the tiny (o, m, l) partial rides back to the master
-                import jax
-
-                p = attn.Partial(*(jax.device_put(x, home) for x in p))
+                p = attn.Partial(
+                    *(_ship(x, home, "decode_partial_home") for x in p)
+                )
+            # counted so SPMD tests/benches can assert the sequential
+            # Python-loop merge is NEVER reached when the mesh path is armed
+            ops.dispatch_counts["decode_merge_loop"] += 1
             part = attn.merge_partial(part, p)
         return attn.finalize_partial(part).astype(q.dtype)

@@ -279,18 +279,16 @@ class LocalExecutor:
             covered += lengths
             # pool-owned incrementally-synced mirror: steady-state decode
             # uploads one slot per request; packed-prefill slots upload 0
-            kdev, vdev, posdev = pool.device_kv()
-            paged_shape = (pool.n_attn, pool.n_pages, pool.page_size) + kdev.shape[2:]
+            kdev, vdev, posdev = pool.device_paged_kv()
             shards.append(PagedShard(
                 # block tables ride with the mirror's device so the whole
                 # per-shard partial computes where the stripe lives
-                k_pages=kdev.reshape(paged_shape),
-                v_pages=vdev.reshape(paged_shape),
+                k_pages=kdev,
+                v_pages=vdev,
                 table=pool._dev_put(table),
                 lengths=pool._dev_put(lengths),
                 # per-slot positions are only consumed by window masking
-                pos=(posdev.reshape(pool.n_pages, pool.page_size)
-                     if eng.cfg.sliding_window else None),
+                pos=(posdev if eng.cfg.sliding_window else None),
             ))
         # cache holds tokens 0..seq_len-2; the processed token's KV is
         # produced by this step and appended at the master afterwards
@@ -305,11 +303,18 @@ class LocalExecutor:
         finally:
             self._paged_impl.end_step()
             eng.model.attn_impl = prev_impl
+        self._emit_decoded(g, logits, kvs)
+
+    def _emit_decoded(self, g, logits, kvs) -> None:
+        """Shared batched-decode epilogue: sample one token per request and
+        stash the step's new per-layer KV; _on_decode_done fills it once the
+        slot is allocated.  logits [>=B, V]; kvs [L, >=B, 1, KVH, D] (rows
+        past len(g.requests) are bucket padding)."""
+        eng = self.eng
         logits = np.asarray(logits)
         for b, r in enumerate(g.requests):
             r.output_tokens.append(eng._sample_token(logits[b]))
             if kvs is not None:
-                # stash; _on_decode_done fills it once the slot is allocated
                 eng._pending_kv[r.rid] = (
                     np.asarray(kvs[0][:, b], np.float32),  # [L, 1, KVH, D]
                     np.asarray(kvs[1][:, b], np.float32),
@@ -362,18 +367,28 @@ class MeshExecutor(LocalExecutor):
     instance tuple), so elastic DoP groups map to disjoint device groups of
     one physical mesh, like the paper's ESP groups on one GPU cluster.
 
-    Decode reuses the Local paths: the per-instance paged partials already
-    execute on each instance's own device (the pool mirrors are bound
-    there) and the LSE-merge pulls only the tiny (o, m, l) partials to the
-    master — wiring that merge through a decode-side shard_map is the
-    ROADMAP's "overlap decode combine" item, now tractable behind this
-    seam.
+    Decode is SPMD too (``spmd_decode=True``): the whole batched decode
+    iteration compiles as ONE program in which every layer's multi-master
+    LSE-merge is a shard_map collective over a 1-D "data" mesh of exactly
+    the KV-holding instances' mirror devices.  The sharded paged operand is
+    assembled ZERO-COPY from the per-rank pool mirrors
+    (`KVPool.device_paged_kv` slices aliased together with
+    `jax.make_array_from_single_device_arrays`), the query reaches the
+    shards as a compiled replication instead of a per-shard `device_put`
+    loop, and the merge is a `pmax`+`psum` on the weighted
+    (o·exp(m-M), l·exp(m-M)) accumulator (`core.esp.paged_decode_spmd`) —
+    no per-layer host sync points.  ``decode_overlap=False`` pins each
+    merge collective behind an optimization barrier (the benchmark's
+    sequential baseline, mirroring ``double_buffer=False`` for prefill).
+    Groups that cannot get one distinct mirror device per KV-holding
+    instance fall back to the per-shard loop.
 
     ``double_buffer=False`` degrades the ring to the sequential baseline
     (transfer strictly after compute) — the benchmark's comparison arm.
     """
 
-    def __init__(self, engine, mesh=None, *, double_buffer: bool = True):
+    def __init__(self, engine, mesh=None, *, double_buffer: bool = True,
+                 spmd_decode: bool = True, decode_overlap: bool = True):
         super().__init__(engine)
         if mesh is None:
             import jax
@@ -386,7 +401,12 @@ class MeshExecutor(LocalExecutor):
         assert "data" in mesh.axis_names, mesh.axis_names
         self.mesh = mesh
         self.double_buffer = double_buffer
+        self.spmd_decode = spmd_decode
+        self.decode_overlap = decode_overlap
         self._group_meshes: Dict[Tuple[int, ...], Any] = {}
+        self._decode_meshes: Dict[Tuple[int, ...], Any] = {}
+        self._decode_programs: Dict[Tuple, Any] = {}
+        self._params_rep: Dict[Any, Any] = {}
         self._bind_pool_devices()
 
     def _bind_pool_devices(self) -> None:
@@ -455,3 +475,149 @@ class MeshExecutor(LocalExecutor):
             mesh=getattr(self, "_step_mesh", None),
             double_buffer=self.double_buffer,
         )
+
+    # decode: the whole iteration as ONE SPMD program ---------------------
+    def _decode_mesh(self, instances: Tuple[int, ...]):
+        """1-D ("data",) mesh over exactly the KV-holding instances' mirror
+        devices (cached per instance tuple).  Returns None (-> per-shard
+        loop fallback) when the instances don't map to distinct devices."""
+        if instances in self._decode_meshes:
+            return self._decode_meshes[instances]
+        import numpy as np_
+        from jax.sharding import Mesh
+
+        devs = [self.eng.pool.pools[i].device for i in instances]
+        if None in devs or len(set(devs)) < len(devs):
+            m = None
+        else:
+            m = Mesh(np_.asarray(devs), ("data",))
+        self._decode_meshes[instances] = m
+        return m
+
+    def _replicated_params(self, mesh):
+        """Engine params replicated over the decode mesh ONCE (committed),
+        so steady-state decode iterations re-transfer nothing."""
+        pr = self._params_rep.get(mesh)
+        if pr is None:
+            import jax
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            pr = jax.device_put(
+                self.eng.params, NamedSharding(mesh, P())
+            )
+            self._params_rep[mesh] = pr
+        return pr
+
+    def _decode_program(self, bb: int, mpb: int, mesh):
+        """Jitted whole-iteration decode program for one (batch bucket,
+        page bucket, mesh) tuple — O(log) compiled variants, like the
+        prefill program cache."""
+        key = (bb, mpb, mesh, self.decode_overlap)
+        fn = self._decode_programs.get(key)
+        if fn is None:
+            import jax
+
+            from repro.core.paged_decode import SpmdPagedShards
+            from repro.models.transformer import Cache
+
+            model, impl = self.eng.model, self._paged_impl
+            overlap = self.decode_overlap
+
+            def step(params, toks, n_cached, k_g, v_g, tbl_g, len_g, pos_g):
+                shards = SpmdPagedShards(k_g, v_g, tbl_g, len_g, pos_g)
+                impl.begin_step(shards, mesh=mesh, overlap=overlap)
+                try:
+                    logits, _, kvs = model.decode(
+                        params, toks, Cache(length=n_cached)
+                    )
+                finally:
+                    impl.end_step()
+                return logits, kvs
+
+            fn = self._decode_programs[key] = jax.jit(step)
+        return fn
+
+    def _decode_spmd_setup(self, g):
+        """Assemble the SPMD decode call for one DecodeBatch: returns
+        (jitted program, concrete args) or None when the group cannot run
+        SPMD (single shard, unbound/aliased mirror devices).
+
+        The paged operands are assembled from the per-rank mirrors IN
+        PLACE: each pool's `device_paged_kv` view becomes data-rank i's
+        slice of one mesh-sharded array — the executor ships per-request
+        block-table rows (tiny) and ZERO KV bytes."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        eng = self.eng
+        rids = [r.rid for r in g.requests]
+        n_cached = np.array([r.seq_len - 1 for r in g.requests], np.int32)
+        infos = []
+        for pool in eng.pool.pools:
+            if pool.instance_id in eng.failed:
+                continue
+            table, lengths = pool.block_table(rids)
+            if lengths.any():
+                infos.append((pool, table, lengths))
+        if len(infos) < 2:
+            return None
+        mesh = self._decode_mesh(tuple(p.instance_id for p, _, _ in infos))
+        if mesh is None:
+            return None
+        covered = np.sum([lg for _, _, lg in infos], axis=0)
+        # cache holds tokens 0..seq_len-2; the processed token's KV is
+        # produced by this step and appended at the master afterwards
+        assert (covered == n_cached).all(), (covered, n_cached)
+        n, b = len(infos), len(rids)
+        bb = self._bucket(b, lo=1)
+        mpb = self._bucket(max(t.shape[1] for _, t, _ in infos), lo=1)
+        sh = NamedSharding(mesh, P("data"))
+        kds, vds, pds = [], [], []
+        for pool, _, _ in infos:
+            kd, vd, pd = pool.device_paged_kv()
+            kds.append(kd[None])
+            vds.append(vd[None])
+            pds.append(pd[None])
+        assemble = jax.make_array_from_single_device_arrays
+        k_g = assemble((n,) + kds[0].shape[1:], sh, kds)
+        v_g = assemble((n,) + vds[0].shape[1:], sh, vds)
+        pos_g = (
+            assemble((n,) + pds[0].shape[1:], sh, pds)
+            if eng.cfg.sliding_window else None
+        )
+        tbl = np.zeros((n, bb, mpb), np.int32)
+        lens = np.zeros((n, bb), np.int32)
+        for i, (_, t, lg) in enumerate(infos):
+            tbl[i, :b, : t.shape[1]] = t
+            lens[i, :b] = lg
+        toks = np.zeros(bb, np.int32)
+        toks[:b] = [r.output_tokens[-1] for r in g.requests]
+        ncb = np.zeros(bb, np.int32)
+        ncb[:b] = n_cached
+        fn = self._decode_program(bb, mpb, mesh)
+        args = (
+            self._replicated_params(mesh), jnp.asarray(toks),
+            jnp.asarray(ncb), k_g, v_g, jax.device_put(tbl, sh),
+            jax.device_put(lens, sh), pos_g,
+        )
+        return fn, args
+
+    def decode_paged(self, g) -> None:
+        """One shard_map decode iteration for the whole group: per layer,
+        each rank's paged partial computes over the mirror it holds and the
+        LSE-merge is a collective XLA can schedule against independent
+        compute — zero per-shard Python-loop merges, zero per-layer
+        `device_put` hops (see `core.esp.paged_decode_spmd`)."""
+        setup = self._decode_spmd_setup(g) if self.spmd_decode else None
+        if setup is None:
+            return super().decode_paged(g)
+        fn, args = setup
+        eng = self.eng
+        prev_impl = eng.model.attn_impl
+        eng.model.attn_impl = self._paged_impl
+        try:
+            logits, kvs = fn(*args)
+        finally:
+            eng.model.attn_impl = prev_impl
+        self._emit_decoded(g, logits, kvs)

@@ -293,10 +293,11 @@ class LoongServeEngine(BaseServingEngine):
     Real-mode compute is delegated to an executor (engine/executor.py):
     `LocalExecutor` (default) runs the in-process packed/paged paths;
     `MeshExecutor` (``executor="mesh"`` or an explicit ``mesh=``) runs the
-    DoP>1 packed ring prefill as a shard_map program on a real
-    ("data", "model") device mesh with per-instance KV mirrors bound to
-    their own data-shard devices.  The engine itself holds NO kernel
-    dispatch — only scheduling, lifecycle and accounting."""
+    DoP>1 packed ring prefill AND the batched paged decode iteration as
+    shard_map programs on a real ("data", "model") device mesh with
+    per-instance KV mirrors bound to their own data-shard devices (the
+    decode LSE-merge is a pmax+psum collective).  The engine itself holds
+    NO kernel dispatch — only scheduling, lifecycle and accounting."""
 
     def __init__(self, *args, mcfg: Optional[ManagerConfig] = None,
                  executor: Optional[str] = None, mesh=None, **kwargs):

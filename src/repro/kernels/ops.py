@@ -171,6 +171,15 @@ def prefill_ring_chunk(
     )
 
 
+def _payload_bytes(operands) -> int:
+    """Per-rank payload bytes of a collective's operands (static shapes
+    inside a shard_map body make trace-time accounting exact)."""
+    return sum(
+        int(x.size) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(operands)
+    )
+
+
 def ring_ppermute(operands, axis_name: str, pairs):
     """`lax.ppermute` wrapper for the SPMD prefill ring: forwards the KV
     chunk (and its per-shard offsets / any carried metadata) to the ring
@@ -179,11 +188,34 @@ def ring_ppermute(operands, axis_name: str, pairs):
     is exact).  Every ring leg of the mesh executor goes through here so
     tests and benchmarks can assert/record the communication volume."""
     dispatch_counts["ring_ppermute"] += 1
-    leaves = jax.tree_util.tree_leaves(operands)
-    comm_bytes["ring_ppermute"] += sum(
-        int(x.size) * jnp.dtype(x.dtype).itemsize for x in leaves
-    )
+    comm_bytes["ring_ppermute"] += _payload_bytes(operands)
     return jax.lax.ppermute(operands, axis_name, pairs)
+
+
+def psum(operands, axis_name: str):
+    """Counted `lax.psum`: the SPMD decode LSE-merge reduces the weighted
+    (o·exp(m-M), l·exp(m-M)) accumulators across the KV shards through here,
+    so `comm_bytes` covers decode traffic the same way `ring_ppermute`
+    covers the prefill ring.  Bytes are per-rank payload (the reduced tensor
+    size), not wire volume — the all-reduce algorithm is the backend's."""
+    dispatch_counts["psum"] += 1
+    comm_bytes["psum"] += _payload_bytes(operands)
+    return jax.lax.psum(operands, axis_name)
+
+
+def pmax(operands, axis_name: str):
+    """Counted `lax.pmax` (the decode merge's global running-max M)."""
+    dispatch_counts["pmax"] += 1
+    comm_bytes["pmax"] += _payload_bytes(operands)
+    return jax.lax.pmax(operands, axis_name)
+
+
+def count_transfer(key: str, operands) -> None:
+    """Account an explicit host-driven device transfer (e.g. the per-shard
+    decode loop's q broadcast / partial pull-home in `core.paged_decode`)
+    under `comm_bytes[key]` — decode comm stays visible to benchmarks even
+    on the non-SPMD path."""
+    comm_bytes[key] += _payload_bytes(operands)
 
 
 def paged_decode_partial(

@@ -244,6 +244,26 @@ def packed_prefill_ring_chunk_banded(
     return o, m, l
 
 
+def paged_decode_merge_ref(
+    q, k_new, v_new, shards, *, query_pos=None, window=None, softcap=None,
+):
+    """Dense multi-shard oracle for the distributed decode merge (SPMD or
+    per-shard loop): the new token's own KV partial LSE-merged with one
+    paged partial per shard, finalized.  ``shards`` is an iterable of
+    ``(k_pages, v_pages, block_table, lengths, page_pos)`` tuples — the
+    per-instance pool views; merge order matches the executor's (new-token
+    partial first, shards in instance order), though the merge is
+    order-insensitive up to float rounding."""
+    part = A.partial_attention(q, k_new, v_new, None, softcap=softcap)
+    for kp, vp, bt, lens, pos in shards:
+        p = paged_flash_decode_partial_ref(
+            q, kp, vp, bt, lens, pos, query_pos=query_pos, window=window,
+            softcap=softcap,
+        )
+        part = A.merge_partial(part, p)
+    return A.finalize_partial(part)
+
+
 def paged_flash_decode_partial_ref(
     q,  # [B, 1, H, D]
     k_pages,  # [n_pages, P, KVH, D]

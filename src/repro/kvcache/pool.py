@@ -489,6 +489,21 @@ class KVPool:
         self._mirror = cur
         return cur
 
+    def device_paged_kv(self):
+        """Page-shaped view of the device mirror — the per-rank local shard
+        of the SPMD decode manual region (and the per-instance launch operand
+        of the per-shard loop): ``(k, v, pos)`` reshaped to
+        ``[n_attn, n_pages, P, KVH, D]`` / ``[n_pages, P]`` on the bound
+        device.  Runs the same incremental dirty sync as `device_kv()`; the
+        reshape stays on the mirror's device, so assembling the mesh-wide
+        sharded array from these views moves zero KV bytes."""
+        kd, vd, pd = self.device_kv()
+        paged = (self.n_attn, self.n_pages, self.page_size) + kd.shape[2:]
+        return (
+            kd.reshape(paged), vd.reshape(paged),
+            pd.reshape(self.n_pages, self.page_size),
+        )
+
     def drop_mirror(self) -> None:
         """Invalidate the device mirror (instance failure / state restore);
         the next `device_kv()` rebuilds it with one full upload.  Pending

@@ -206,10 +206,173 @@ def case_checkpoint_restore():
     print("CHECKPOINT-RESTORE-OK")
 
 
+def _build_paged_shards(rng, n, lens, kvh, d, page):
+    """Distribute each request's cached tokens round-robin over ``n`` shards
+    and pack them pool-style (dense local order, exclusive pages).  Returns
+    (k_dense, v_dense [B, max(lens), kvh, d]) and the per-shard
+    (k_pages, v_pages, table, lengths, pos) tuples, all with COMMON shapes
+    across shards (the SPMD operand stacks them on a leading rank axis)."""
+    B = len(lens)
+    s_max = max(lens)
+    k_dense = rng.normal(size=(B, s_max, kvh, d)).astype(np.float32)
+    v_dense = rng.normal(size=(B, s_max, kvh, d)).astype(np.float32)
+    locs = [
+        [np.arange(s, lens[b], n) for b in range(B)] for s in range(n)
+    ]
+    pages_req = [
+        [max(-(-len(p) // page), 0) for p in locs[s]] for s in range(n)
+    ]
+    n_pages = max(sum(pr) for pr in pages_req) + 1
+    max_tbl = max(max(pr) for pr in pages_req) or 1
+    shards = []
+    for s in range(n):
+        kp = np.zeros((n_pages, page, kvh, d), np.float32)
+        vp = np.zeros((n_pages, page, kvh, d), np.float32)
+        pos = np.full((n_pages, page), -1, np.int32)
+        tbl = np.zeros((B, max_tbl), np.int32)
+        counts = np.array([len(p) for p in locs[s]], np.int32)
+        pg = 0
+        for b in range(B):
+            npg = pages_req[s][b]
+            if npg == 0:
+                continue
+            tbl[b, :npg] = np.arange(pg, pg + npg)
+            c = counts[b]
+            flat = np.zeros((npg * page, kvh, d), np.float32)
+            flat[:c] = k_dense[b, locs[s][b]]
+            kp[pg : pg + npg] = flat.reshape(npg, page, kvh, d)
+            flat = np.zeros((npg * page, kvh, d), np.float32)
+            flat[:c] = v_dense[b, locs[s][b]]
+            vp[pg : pg + npg] = flat.reshape(npg, page, kvh, d)
+            fpos = np.full(npg * page, -1, np.int32)
+            fpos[:c] = locs[s][b]
+            pos[pg : pg + npg] = fpos.reshape(npg, page)
+            pg += npg
+        shards.append((kp, vp, tbl, counts, pos))
+    return k_dense, v_dense, shards
+
+
+def case_decode_parity():
+    """SPMD paged decode (one shard_map region per layer, pmax+psum
+    LSE-merge) == dense decode oracle for DoP {2, 4} x {GQA, sliding
+    window, logit softcap} x {overlapped, barriered}, on paged shards laid
+    out exactly like the pool's (round-robin token split, exclusive pages);
+    the new `kernels/ref.py` multi-shard merge oracle agrees too."""
+    from jax.sharding import Mesh
+
+    from repro.models.transformer import DefaultAttnImpl
+
+    h, kvh, d, page = 4, 2, 32, 4
+    lens = [13, 1, 29, 8, 22]
+    B = len(lens)
+    rng = np.random.default_rng(3)
+    q = rng.normal(size=(B, 1, h, d)).astype(np.float32)
+    k_new = rng.normal(size=(B, 1, kvh, d)).astype(np.float32)
+    v_new = rng.normal(size=(B, 1, kvh, d)).astype(np.float32)
+    cl = jnp.asarray(lens, jnp.int32)
+    for dop in (2, 4):
+        mesh = Mesh(np.asarray(jax.devices()[:dop]), ("data",))
+        k_dense, v_dense, shards = _build_paged_shards(
+            rng, dop, lens, kvh, d, page
+        )
+        k_g = jnp.asarray(np.stack([s[0] for s in shards]))
+        v_g = jnp.asarray(np.stack([s[1] for s in shards]))
+        tbl_g = jnp.asarray(np.stack([s[2] for s in shards]))
+        len_g = jnp.asarray(np.stack([s[3] for s in shards]))
+        pos_g = jnp.asarray(np.stack([s[4] for s in shards]))
+        for window, softcap in [(None, None), (9, None), (None, 5.0)]:
+            want = np.asarray(DefaultAttnImpl().decode_attn(
+                jnp.asarray(q), jnp.asarray(k_dense), jnp.asarray(v_dense),
+                jnp.asarray(k_new), jnp.asarray(v_new), cl,
+                window=window, softcap=softcap,
+            ))
+            ref_merge = np.asarray(kref.paged_decode_merge_ref(
+                jnp.asarray(q), jnp.asarray(k_new), jnp.asarray(v_new),
+                [(s[0], s[1], s[2], s[3], s[4]) for s in shards],
+                query_pos=cl, window=window, softcap=softcap,
+            ))
+            np.testing.assert_allclose(
+                ref_merge, want, atol=2e-5,
+                err_msg=f"merge-ref {(dop, window, softcap)}",
+            )
+            for overlap in (True, False):
+                out = np.asarray(jax.jit(
+                    lambda q_, kn, vn, kg, vg, tg, lg, pg, _ov=overlap,
+                    _w=window, _sc=softcap: esp.paged_decode_spmd(
+                        mesh, q_, kn, vn, cl, kg, vg, tg, lg,
+                        pg if _w is not None else None,
+                        window=_w, softcap=_sc, overlap=_ov,
+                    )
+                )(jnp.asarray(q), jnp.asarray(k_new), jnp.asarray(v_new),
+                  k_g, v_g, tbl_g, len_g, pos_g))
+                np.testing.assert_allclose(
+                    out, want, atol=2e-5,
+                    err_msg=str((dop, window, softcap, overlap)),
+                )
+    print("DECODE-PARITY-OK")
+
+
+def case_decode_e2e():
+    """Engine decode through the MeshExecutor's SPMD program at DoP {2, 4}:
+    ZERO per-shard Python-loop merges (`decode_merge_loop`), the collective
+    merge dispatched and byte-counted (`psum`/`pmax`), distinct per-instance
+    mirror devices, token sequences == serial dense oracle — for the
+    overlapped arm, the barriered baseline, and (at DoP 2) the legacy
+    per-shard loop with its q-broadcast / partial-home transfers counted."""
+    from repro.engine.executor import MeshExecutor
+
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    lengths = [33, 17, 50, 8]
+
+    def run_engine(dop, arm):
+        mesh = make_test_mesh(data=dop, model=8 // dop)
+        eng = LoongServeEngine(CFG, dop, 4000, store_values=True,
+                               model=model, params=params, page_size=16,
+                               mesh=mesh)
+        if arm == "barrier":
+            eng.executor = MeshExecutor(eng, mesh, decode_overlap=False)
+        elif arm == "loop":
+            eng.executor = MeshExecutor(eng, mesh, spmd_decode=False)
+        rng = np.random.default_rng(31 + dop)
+        batch = _prefill_batch(eng, rng, lengths, max_new=4)
+        reqs = list(batch.requests)
+        eng._on_prefill_done(batch)
+        ops.reset_dispatch_counts()
+        eng._push(eng.clock, "join", 0)
+        m = eng.run()
+        assert len(m.finished) == len(reqs)
+        devs = {str(p.device) for p in eng.pool.pools}
+        assert len(devs) == dop, devs
+        for r in reqs:
+            want = _oracle_tokens(model, params, r, 3)
+            assert want == r.output_tokens, (
+                dop, arm, r.rid, want, r.output_tokens
+            )
+        return dict(ops.dispatch_counts), dict(ops.comm_bytes)
+
+    for dop in (2, 4):
+        for arm in ("overlap", "barrier"):
+            d, c = run_engine(dop, arm)
+            assert d.get("decode_merge_loop", 0) == 0, (dop, arm, d)
+            assert d.get("paged_decode_spmd", 0) >= 1, (dop, arm, d)
+            assert d.get("psum", 0) >= 1 and d.get("pmax", 0) >= 1, d
+            assert c.get("psum", 0) > 0, c
+    # pre-SPMD per-shard loop still exact, its decode comm now visible
+    d, c = run_engine(2, "loop")
+    assert d.get("paged_decode_spmd", 0) == 0, d
+    assert d.get("decode_merge_loop", 0) >= 1, d
+    assert c.get("decode_q_broadcast", 0) > 0, c
+    assert c.get("decode_partial_home", 0) > 0, c
+    print("DECODE-E2E-OK")
+
+
 CASES = {
     "ring_parity": case_ring_parity,
     "engine_e2e": case_engine_e2e,
     "checkpoint_restore": case_checkpoint_restore,
+    "decode_parity": case_decode_parity,
+    "decode_e2e": case_decode_e2e,
 }
 
 

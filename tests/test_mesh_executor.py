@@ -6,7 +6,10 @@ Covers the ISSUE-4 acceptance matrix: shard_map ring prefill == dense
 oracle for DoP {2, 4} x {GQA, sliding window, softcap} (both ring
 orderings), the engine e2e through the MeshExecutor with zero serial /
 zero in-process-replay dispatches and zero mirror re-uploads, and
-checkpoint/restore under the sharded per-device mirror."""
+checkpoint/restore under the sharded per-device mirror — plus the ISSUE-5
+decode matrix: SPMD paged decode == dense oracle for DoP {2, 4} x {GQA,
+window, softcap} x {overlapped, barriered}, and engine decode through the
+one-shard_map-program path with zero per-shard Python-loop merges."""
 import os
 import pathlib
 import subprocess
@@ -38,3 +41,11 @@ def test_mesh_engine_e2e():
 
 def test_mesh_checkpoint_restore():
     _run_case("checkpoint_restore")
+
+
+def test_mesh_decode_parity_matrix():
+    _run_case("decode_parity")
+
+
+def test_mesh_decode_e2e():
+    _run_case("decode_e2e")

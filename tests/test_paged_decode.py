@@ -156,6 +156,57 @@ def test_one_launch_per_instance_independent_of_batch():
         assert ops.dispatch_counts["decode_partial"] == 0
 
 
+def test_layer_cursor_mismatch_raises():
+    """The armed impl's layer cursor is verified against the number of
+    per-layer storage planes: an over-run raises at the offending
+    decode_attn call, an under-run raises at end_step — a model/impl
+    stack-order mismatch can no longer read the wrong layer's pages
+    silently."""
+    from repro.core.paged_decode import PagedDecodeAttnImpl, PagedShard
+
+    rng = np.random.default_rng(1)
+    page, n_pages, kvh, d, h, L, b = 4, 4, 2, 8, 4, 3, 2
+    kp = jnp.asarray(rng.normal(size=(L, n_pages, page, kvh, d)), jnp.float32)
+    shard = PagedShard(
+        kp, kp, jnp.asarray(np.zeros((b, 1), np.int32)),
+        jnp.asarray(np.full(b, page, np.int32)),
+        jnp.asarray(np.arange(n_pages * page, dtype=np.int32)
+                    .reshape(n_pages, page)),
+    )
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, 1, kvh, d)), jnp.float32)
+    cl = np.full(b, page, np.int32)
+
+    def call(impl):
+        impl.decode_attn(q, None, None, kn, kn, cl, window=None, softcap=None)
+
+    # under-run: fewer decode_attn calls than stored planes
+    impl = PagedDecodeAttnImpl(impl="xla")
+    impl.begin_step([shard])
+    for _ in range(L - 1):
+        call(impl)
+    with pytest.raises(AssertionError, match="layer planes"):
+        impl.end_step()
+    assert impl._shards is None  # disarmed despite the failed verification
+
+    # over-run: the L+1-th call trips before reading out of bounds
+    impl = PagedDecodeAttnImpl(impl="xla")
+    impl.begin_step([shard])
+    for _ in range(L):
+        call(impl)
+    with pytest.raises(AssertionError, match="stack mismatch"):
+        call(impl)
+    impl._layer = impl._n_planes  # repair so disarm verification passes
+    impl.end_step()
+
+    # exact consumption passes clean
+    impl = PagedDecodeAttnImpl(impl="xla")
+    impl.begin_step([shard])
+    for _ in range(L):
+        call(impl)
+    impl.end_step()
+
+
 def test_real_engine_paged_pool_matches_oracle_zero_migration():
     """Real-mode engine on a page_size>1 pool: generated tokens match the
     dense single-request oracle, decode issues no per-request dispatches, and
