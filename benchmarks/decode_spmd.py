@@ -9,21 +9,29 @@ single-device runtime).
 Measures one REAL engine decode iteration at DoP {2, 4} over ragged cached
 KV striped across the instances' per-device pool mirrors:
 
-  * ``spmd_overlap`` — MeshExecutor, the whole iteration as ONE shard_map
-    program; every layer's LSE-merge is a pmax+psum collective with NO
-    barriers (XLA free to schedule it against independent compute);
-  * ``spmd_barrier`` — same program with each merge collective pinned
-    behind an optimization barrier (the sequential baseline);
+  * ``spmd_batch_sharded`` — MeshExecutor default: the whole iteration as
+    ONE shard_map program with the non-attention stack BATCH-SHARDED
+    (LoongServe §4.2 multi-master — each rank embeds/FFNs/samples B/n
+    rows, per-layer boundary all_gather(q-slice) in / psum_scatter of the
+    LSE-merged output back to batch shards, sampled ids exchanged and KV
+    appends master-routed in-program);
+  * ``spmd_overlap`` — the replicated-stack PR 5 program
+    (``batch_shard=False``): every layer's LSE-merge is a pmax+psum
+    collective with NO barriers (XLA free to schedule it against
+    independent compute), but embed/FFN/unembed replicate across ranks;
+  * ``spmd_barrier`` — the replicated program with each merge collective
+    pinned behind an optimization barrier (the sequential baseline);
   * ``loop``         — the pre-SPMD per-shard Python loop on the same
     per-device mirrors: one eager paged launch per instance per layer with
     explicit q-broadcast / partial-home `device_put` hops.
 
 plus the per-iteration collective payload bytes (trace-time counters in
-`kernels.ops`) and the structural StableHLO overlap evidence (mirroring the
-prefill_spmd methodology): the overlapped program carries ZERO optimization
-barriers between its merge all-reduces and the rest of the layer stack's
-dots, the barriered program carries exactly one per layer.  Writes
-``BENCH_decode_spmd.json`` (``_quick`` suffix under --quick).
+`kernels.ops`), the structural StableHLO overlap evidence (mirroring the
+prefill_spmd methodology — the batch-sharded and overlapped programs carry
+ZERO optimization barriers, the barriered one exactly one per layer), and
+the compiled dot-FLOP census ratio of the batch-sharded program vs the
+replicated one (~1/n).  Writes ``BENCH_decode_spmd.json`` (``_quick``
+suffix under --quick).
 """
 from __future__ import annotations
 
@@ -56,7 +64,7 @@ def run(quick: bool = False) -> dict:
 
     cfg = reduced(REGISTRY["lwm-7b"])
     page = 64
-    b = 4 if quick else 8
+    b = 4 if quick else 16
     iters = 3 if quick else 10
     lo, hi = (64, 256) if quick else (256, 1024)
     rng = np.random.default_rng(0)
@@ -77,10 +85,14 @@ def run(quick: bool = False) -> dict:
             eng = LoongServeEngine(cfg, dop, capacity, store_values=True,
                                    model=model, params=params,
                                    page_size=page, mesh=mesh)
-            if arm == "spmd_barrier":
-                eng.executor = MeshExecutor(eng, mesh, decode_overlap=False)
+            if arm == "spmd_overlap":
+                eng.executor = MeshExecutor(eng, mesh, batch_shard=False)
+            elif arm == "spmd_barrier":
+                eng.executor = MeshExecutor(eng, mesh, decode_overlap=False,
+                                            batch_shard=False)
             elif arm == "loop":
                 eng.executor = MeshExecutor(eng, mesh, spmd_decode=False)
+            # spmd_batch_sharded: the engine's default MeshExecutor
             # ragged cached KV striped token-granularly across the
             # instances' per-device mirrors, exactly as after prefill
             reqs = []
@@ -110,15 +122,47 @@ def run(quick: bool = False) -> dict:
                 fills.append((eng.pool.pools[inst], r.rid, last, kv1))
             return eng, g, fills
 
+        def program_text(eng, g, compiled=False):
+            """StableHLO (or compiled HLO) of the engine's decode program;
+            the paged impl must be the model's attn impl during (re)trace."""
+            fn, args, _ = eng.executor._decode_spmd_setup(g)
+            prev = eng.model.attn_impl
+            eng.model.attn_impl = eng.executor._paged_impl
+            try:
+                low = fn.lower(*args)
+                return low.compile().as_text() if compiled else low.as_text()
+            finally:
+                eng.model.attn_impl = prev
+
         arm_res: dict = {}
         hlo: dict = {}
-        for arm in ("spmd_overlap", "spmd_barrier", "loop"):
+        flops: dict = {}
+        for arm in ("spmd_batch_sharded", "spmd_overlap", "spmd_barrier",
+                    "loop"):
             eng, g, fills = build(arm)
             ops.reset_dispatch_counts()
             eng._real_decode_paged(g)  # warmup: compile (counts trace)
             d = dict(ops.dispatch_counts)
             comm = dict(ops.comm_bytes)
-            if arm.startswith("spmd"):
+            if arm == "spmd_batch_sharded":
+                assert d.get("decode_merge_loop", 0) == 0, d
+                assert d.get("decode_iteration_spmd", 0) == 1, d
+                assert d.get("paged_decode_sharded", 0) == n_layers, d
+                assert d.get("psum_scatter", 0) == n_layers, d
+                txt = program_text(eng, g)
+                hlo[arm] = {
+                    "all_reduces": txt.count("stablehlo.all_reduce"),
+                    "reduce_scatters": txt.count("stablehlo.reduce_scatter"),
+                    "all_gathers": txt.count("stablehlo.all_gather"),
+                    "opt_barriers": txt.count("stablehlo.optimization_barrier"),
+                    "dots": txt.count("stablehlo.dot"),
+                }
+                from repro.launch.hlo import hlo_census
+
+                flops[arm] = hlo_census(program_text(eng, g, compiled=True))[
+                    "flops"
+                ]
+            elif arm.startswith("spmd"):
                 assert d.get("decode_merge_loop", 0) == 0, d
                 assert d.get("paged_decode_spmd", 0) == n_layers, d
                 # structural overlap evidence (StableHLO — the CPU backend
@@ -129,13 +173,18 @@ def run(quick: bool = False) -> dict:
                 # stack's independent compute (next layer's weight loads /
                 # dots, the new-token partial) — while the barriered
                 # program pins each of the n_layers merges.
-                fn, args = eng.executor._decode_spmd_setup(g)
-                txt = fn.lower(*args).as_text()
+                txt = program_text(eng, g)
                 hlo[arm] = {
                     "all_reduces": txt.count("stablehlo.all_reduce"),
                     "opt_barriers": txt.count("stablehlo.optimization_barrier"),
                     "dots": txt.count("stablehlo.dot"),
                 }
+                if arm == "spmd_overlap":
+                    from repro.launch.hlo import hlo_census
+
+                    flops[arm] = hlo_census(
+                        program_text(eng, g, compiled=True)
+                    )["flops"]
             else:
                 assert d.get("decode_merge_loop", 0) == dop * n_layers, d
                 assert comm.get("decode_q_broadcast", 0) > 0, comm
@@ -154,17 +203,24 @@ def run(quick: bool = False) -> dict:
                 "dispatches_per_trace": d,
                 "collective_bytes_per_iter": {
                     k: comm.get(k, 0)
-                    for k in ("psum", "pmax", "decode_q_broadcast",
-                              "decode_partial_home") if comm.get(k, 0)
+                    for k in ("psum", "pmax", "psum_scatter", "all_gather",
+                              "decode_q_broadcast", "decode_partial_home")
+                    if comm.get(k, 0)
                 },
             }
+        assert hlo["spmd_batch_sharded"]["opt_barriers"] == 0, hlo
         assert hlo["spmd_overlap"]["opt_barriers"] == 0, hlo
         assert hlo["spmd_barrier"]["opt_barriers"] == n_layers, hlo
-        # every layer's merge is collective: >= 2 all-reduces (pmax + the
-        # weighted-accumulator psum) per layer, identical across the arms
+        # replicated arms: every layer's merge is collective — >= 2
+        # all-reduces (pmax + the weighted-accumulator psum) per layer,
+        # identical across the overlap/barrier pair.  The batch-sharded
+        # program swaps the psum for a reduce_scatter and adds the q-slice
+        # gather per layer (plus the token/KV exchanges at the end).
         assert hlo["spmd_overlap"]["all_reduces"] >= 2 * n_layers, hlo
         assert (hlo["spmd_overlap"]["all_reduces"]
                 == hlo["spmd_barrier"]["all_reduces"]), hlo
+        assert hlo["spmd_batch_sharded"]["reduce_scatters"] >= n_layers, hlo
+        assert hlo["spmd_batch_sharded"]["all_gathers"] >= n_layers, hlo
         results[f"dop{dop}"] = {
             **arm_res,
             "overlap_vs_barrier_speedup": (
@@ -174,6 +230,14 @@ def run(quick: bool = False) -> dict:
             "loop_vs_spmd_speedup": (
                 arm_res["loop"]["s_per_iter"]
                 / arm_res["spmd_overlap"]["s_per_iter"]
+            ),
+            "batch_vs_replicated_speedup": (
+                arm_res["spmd_overlap"]["s_per_iter"]
+                / arm_res["spmd_batch_sharded"]["s_per_iter"]
+            ),
+            # per-rank dot FLOPs, batch-sharded / replicated (~1/dop)
+            "flop_census_ratio": (
+                flops["spmd_batch_sharded"] / flops["spmd_overlap"]
             ),
             "decode_hlo": hlo,
         }
@@ -209,16 +273,21 @@ def main() -> None:
     for dop in (2, 4):
         r = out[f"dop{dop}"]
         rows.append(
+            f"dop{dop}_batch:{r['spmd_batch_sharded']['tok_s']:.1f}tok/s;"
             f"dop{dop}_spmd:{r['spmd_overlap']['tok_s']:.1f}tok/s;"
+            f"dop{dop}_batch_vs_rep:{r['batch_vs_replicated_speedup']:.2f}x;"
+            f"dop{dop}_flop_ratio:{r['flop_census_ratio']:.3f};"
             f"dop{dop}_vs_loop:{r['loop_vs_spmd_speedup']:.2f}x;"
             f"dop{dop}_ov_vs_bar:{r['overlap_vs_barrier_speedup']:.2f}x;"
-            f"dop{dop}_psum_bytes:"
-            f"{r['spmd_overlap']['collective_bytes_per_iter'].get('psum', 0)};"
+            f"dop{dop}_scatter_bytes:"
+            f"{r['spmd_batch_sharded']['collective_bytes_per_iter'].get('psum_scatter', 0)};"
             f"dop{dop}_overlap_hlo:"
-            f"{r['decode_hlo']['spmd_overlap']['opt_barriers'] == 0}"
+            f"{r['decode_hlo']['spmd_batch_sharded']['opt_barriers'] == 0}"
         )
-    print(f"decode_spmd,{out['dop2']['spmd_overlap']['s_per_iter'] * 1e6:.1f},"
-          + ";".join(rows))
+    print(
+        f"decode_spmd,"
+        f"{out['dop2']['spmd_batch_sharded']['s_per_iter'] * 1e6:.1f},"
+        + ";".join(rows))
 
 
 if __name__ == "__main__":

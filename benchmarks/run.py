@@ -4,7 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows; the `derived` column carries
 the figure's headline quantity (speedups, error percentages, overheads).
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
-"""
+
+``--collate`` instead merges every committed ``BENCH_*.json`` artifact into
+one ``BENCH_trajectory.json`` — per-path tok/s, per-iteration collective
+bytes and speedup/ratio headlines, keyed by bench and git commit — so the
+perf history over PRs reads from one file instead of scattered per-PR
+artifacts (run by the CI smoke step)."""
 from __future__ import annotations
 
 import argparse
@@ -712,12 +717,14 @@ def bench_prefill_spmd(quick: bool = False):
 
 def bench_decode_spmd(quick: bool = False):
     """Mesh-executor decode on an 8-virtual-device host mesh: the whole
-    batched decode iteration as ONE shard_map program whose per-layer
-    LSE-merge is a pmax+psum collective — overlapped vs barriered vs the
-    per-shard Python loop with explicit device hops — plus per-iteration
-    collective payload bytes and structural StableHLO overlap evidence.
-    Runs in a subprocess because the device-count XLA flag must be set
-    before jax initializes.  Writes BENCH_decode_spmd.json."""
+    batched decode iteration as ONE shard_map program — the batch-sharded
+    multi-master arm (stack on B/n rows per rank, all_gather/psum_scatter
+    boundary, in-program sampling) vs the replicated overlapped/barriered
+    programs vs the per-shard Python loop with explicit device hops — plus
+    per-iteration collective payload bytes, structural StableHLO overlap
+    evidence and the ~1/n dot-FLOP census ratio.  Runs in a subprocess
+    because the device-count XLA flag must be set before jax initializes.
+    Writes BENCH_decode_spmd.json."""
     import os
     import pathlib
     import subprocess
@@ -800,13 +807,95 @@ BENCHES = {
 SMOKE = ("decode", "prefill", "prefill_ring", "prefill_spmd", "decode_spmd")
 
 
+def _bench_headline(data: dict) -> dict:
+    """Extract one bench artifact's headline numbers: every ``*tok_s``
+    leaf, every ``collective_bytes_per_iter`` table and every
+    speedup/ratio leaf, each keyed by its dotted path in the artifact."""
+    tok_s: dict = {}
+    bytes_iter: dict = {}
+    derived: dict = {}
+
+    def walk(node, prefix):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            p = f"{prefix}.{k}" if prefix else k
+            if k == "collective_bytes_per_iter" and isinstance(v, dict):
+                for ck, cv in v.items():
+                    bytes_iter[f"{p}.{ck}"] = cv
+            elif isinstance(v, dict):
+                walk(v, p)
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if k.endswith("tok_s"):
+                    tok_s[p] = v
+                elif "speedup" in k or "ratio" in k:
+                    derived[p] = v
+
+    walk(data, "")
+    out = {}
+    if tok_s:
+        out["tok_s"] = tok_s
+    if bytes_iter:
+        out["bytes_per_iter"] = bytes_iter
+    if derived:
+        out["derived"] = derived
+    return out
+
+
+def collate() -> None:
+    """Merge the committed per-PR ``BENCH_*.json`` artifacts (the _quick CI
+    variants excluded) into ``BENCH_trajectory.json``: a ``latest`` headline
+    snapshot per bench plus an append-only per-commit ``history`` (one entry
+    per commit, overwritten on re-run at the same commit)."""
+    import glob
+    import json
+    import subprocess
+
+    benches = {}
+    for path in sorted(glob.glob("BENCH_*.json")):
+        name = path[len("BENCH_"):-len(".json")]
+        if name.endswith("_quick") or name == "trajectory":
+            continue
+        with open(path) as f:
+            headline = _bench_headline(json.load(f))
+        if headline:
+            benches[name] = headline
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — not a repo / no git: still collate
+        commit = "unknown"
+    out_path = "BENCH_trajectory.json"
+    try:
+        with open(out_path) as f:
+            traj = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        traj = {"history": []}
+    traj["latest"] = {"commit": commit, "benches": benches}
+    history = [e for e in traj.get("history", []) if e.get("commit") != commit]
+    history.append({"commit": commit, "benches": benches})
+    traj["history"] = history
+    with open(out_path, "w") as f:
+        json.dump(traj, f, indent=2)
+    _row("collate", 0.0,
+         f"benches:{len(benches)};commits:{len(history)};out:{out_path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI: quick decode+prefill benches only; raise on error")
+    ap.add_argument("--collate", action="store_true",
+                    help="merge BENCH_*.json into BENCH_trajectory.json")
     args = ap.parse_args()
+    if args.collate:
+        print("name,us_per_call,derived")
+        collate()
+        return
     if args.smoke:
         args.quick = True
     print("name,us_per_call,derived")

@@ -2,10 +2,12 @@
 host devices — the DoP>1 packed ring prefill as a real shard_map program
 (each elastic instance physically owns its KV stripe on its own device,
 stripes rotating via ppermute, double-buffered against chunk compute),
-followed by SPMD multi-master paged decode: one shard_map program per
-iteration over the per-device pool mirrors, each layer's LSE-merge a
-pmax+psum collective — validated token-for-token against the serial dense
-oracle.
+followed by batch-sharded SPMD multi-master paged decode: one shard_map
+program per iteration over the per-device pool mirrors, each rank running
+the non-attention stack for only its B/n batch slice, each layer's
+LSE-merge an all_gather(q) + pmax + psum_scatter schedule, sampled tokens
+exchanged and KV appends routed in-program — validated token-for-token
+against the serial dense oracle.
 
   PYTHONPATH=src python examples/esp_spmd_demo.py
 (sets XLA_FLAGS itself — run as a fresh process)
@@ -82,9 +84,13 @@ def main():
     assert len(m.finished) == len(reqs)
     d = dict(ops.dispatch_counts)
     assert d.get("decode_merge_loop", 0) == 0, d  # no per-shard Python loop
-    assert d.get("paged_decode_spmd", 0) >= 1, d
-    print(f"spmd decode: {d.get('paged_decode_spmd', 0)} collective "
-          f"LSE-merges/trace ({ops.comm_bytes.get('psum', 0)} psum bytes), "
+    assert d.get("decode_iteration_spmd", 0) >= 1, d
+    assert d.get("paged_decode_sharded", 0) >= 1, d
+    assert d.get("psum_scatter", 0) >= 1, d
+    print(f"spmd decode: {d.get('paged_decode_sharded', 0)} batch-sharded "
+          f"LSE-merges/trace "
+          f"({ops.comm_bytes.get('psum_scatter', 0)} psum_scatter + "
+          f"{ops.comm_bytes.get('all_gather', 0)} all_gather bytes), "
           "zero per-shard loop merges")
 
     # token-exact vs the serial dense oracle (prefill + N_DECODE decodes)

@@ -230,6 +230,45 @@ def ring_packed_prefill_spmd(
     return striped.unstripe(out, n, axis=0)
 
 
+def _switched_paged_partial(
+    sp: str, n: int, q, k_pages, v_pages, table, lengths, page_pos, *,
+    query_pos, window, softcap, impl: Optional[str],
+):
+    """Per-rank paged-decode partial inside a shard_map body, dispatching
+    the CONFIGURED kernel impl instead of forcing the XLA fallback.
+
+    The rank is only available as a traced value (`lax.axis_index`), but a
+    `pallas_call` needs its grid/scalar-prefetch metadata static — so for
+    non-XLA impls the launch goes through `lax.switch` over ``n``
+    STATICALLY-specialized variants: branch ``r`` is traced with the rank as
+    a compile-time constant, which is where any rank-derived static
+    parameters (e.g. global-position bases for window masking on TPU) get
+    baked into the kernel instead of reaching Pallas as tracers.  The block
+    tables / lengths already arrive pre-sharded, so today's branches differ
+    only by that static context; the XLA reference path needs none of this
+    and dispatches directly."""
+    from repro.kernels import ops
+
+    eff = impl or ops.get_default_impl()
+    if eff == "xla":
+        return ops.paged_decode_partial(
+            q, k_pages, v_pages, table, lengths, page_pos,
+            query_pos=query_pos, window=window, softcap=softcap, impl="xla",
+        )
+
+    def branch(rank: int):  # noqa: ARG001 — today's branches differ only
+        # by the static trace context `rank` pins (see docstring)
+        def run(qb):
+            return ops.paged_decode_partial(
+                qb, k_pages, v_pages, table, lengths, page_pos,
+                query_pos=query_pos, window=window, softcap=softcap,
+                impl=eff,
+            )
+        return run
+
+    return lax.switch(lax.axis_index(sp), [branch(r) for r in range(n)], q)
+
+
 def paged_decode_spmd(
     mesh: Mesh, q, k_new, v_new, query_pos,
     k_pages, v_pages, table, lengths, page_pos=None, *,
@@ -237,6 +276,7 @@ def paged_decode_spmd(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     overlap: bool = True,
+    impl: Optional[str] = None,
 ):
     """One decode layer's multi-master paged attention as ONE shard_map
     region over the mesh's ``sp_axis``: each data rank computes its
@@ -279,9 +319,10 @@ def paged_decode_spmd(
 
     def body(qb, qp, kb, vb, tb, lb, *pb):
         # kb/vb/tb/lb/pb: this rank's mirror view, leading shard dim 1
-        part = ops.paged_decode_partial(
-            qb, kb[0], vb[0], tb[0], lb[0], pb[0][0] if has_pos else None,
-            query_pos=qp, window=window, softcap=softcap, impl="xla",
+        part = _switched_paged_partial(
+            sp, n, qb, kb[0], vb[0], tb[0], lb[0],
+            pb[0][0] if has_pos else None,
+            query_pos=qp, window=window, softcap=softcap, impl=impl,
         )
         m_g = ops.pmax(part.m, sp)
         m_safe = jnp.where(jnp.isinf(m_g), 0.0, m_g)
@@ -310,6 +351,151 @@ def paged_decode_spmd(
     p_new = A.partial_attention(q, k_new, v_new, None, softcap=softcap)
     merged = A.merge_partial(A.Partial(o_s, m_s, l_s), p_new)
     return A.finalize_partial(merged)
+
+
+def paged_decode_attn_sharded(
+    sp: str, n: int, q, k_new, v_new, query_pos_full,
+    k_pages, v_pages, table, lengths, page_pos=None, *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    overlap: bool = True,
+    impl: Optional[str] = None,
+):
+    """One decode layer's BATCH-SHARDED multi-master paged attention
+    boundary, called INSIDE an enclosing shard_map body (no region of its
+    own — the whole iteration is one manual region, see
+    `paged_decode_iteration_spmd`).
+
+    Each rank owns a ``B/n`` batch slice of the non-attention stack, so the
+    layer boundary is exactly LoongServe §4.2's collective schedule:
+
+        qg  = all_gather(q-slice)            (the paper's "send query
+                                              tensors": full-B q per rank)
+        part = paged partial over LOCAL KV   (full B vs this rank's pool
+                                              mirror — exactly as before)
+        M   = pmax(m)                        (tiny [B, 1, H])
+        o_s, l_s = psum_scatter(o·exp(m-M),  ("send back partial results"
+                                l·exp(m-M))   addressed to the masters: the
+                                              reduce RETURNS batch shards)
+        merge with the rank-LOCAL new-token partial, finalize
+
+    replacing PR 5's replicated pmax+psum: per-rank FLOPs for everything
+    outside this boundary drop to ~1/n while the attention partial (already
+    1/n via the KV sharding) is unchanged.  ``overlap=False`` pins the
+    scatter behind an optimization barrier threading the new-token
+    partial's inputs (sequential benchmark baseline); the default leaves
+    XLA free to schedule the collectives against the stack's independent
+    compute, preserving PR 5's overlap property.
+
+    q/k_new/v_new: this rank's batch slice [B/n, 1, ...];
+    query_pos_full [B] REPLICATED (every rank masks the full-B partial);
+    k_pages/v_pages/table/lengths/page_pos: this rank's local pool-mirror
+    plane (no leading rank axis).  Returns the rank's finalized output
+    slice [B/n, 1, H, D] f32."""
+    from repro.kernels import ops
+
+    ops.dispatch_counts["paged_decode_sharded"] += 1
+    b_l = q.shape[0]
+    qg = ops.all_gather(q, sp, axis=0)  # [B, 1, H, D]
+    part = _switched_paged_partial(
+        sp, n, qg, k_pages, v_pages, table, lengths, page_pos,
+        query_pos=query_pos_full, window=window, softcap=softcap, impl=impl,
+    )
+    m_g = ops.pmax(part.m, sp)
+    m_safe = jnp.where(jnp.isinf(m_g), 0.0, m_g)
+    w = jnp.where(jnp.isinf(part.m), 0.0, jnp.exp(part.m - m_safe))
+    o_s, l_s = ops.psum_scatter(
+        (part.o * w[..., None], part.l * w), sp, scatter_dimension=0,
+    )
+    m_s = lax.dynamic_slice_in_dim(m_g, lax.axis_index(sp) * b_l, b_l, axis=0)
+    if not overlap:
+        o_s, m_s, l_s, q, k_new, v_new = lax.optimization_barrier(
+            (o_s, m_s, l_s, q, k_new, v_new)
+        )
+    p_new = A.partial_attention(q, k_new, v_new, None, softcap=softcap)
+    merged = A.merge_partial(A.Partial(o_s, m_s, l_s), p_new)
+    return A.finalize_partial(merged)
+
+
+def paged_decode_iteration_spmd(
+    mesh: Mesh, model, impl, params, toks, n_cached_full,
+    k_pages, v_pages, table, lengths, page_pos, route, *,
+    sp_axis: str = "data",
+    overlap: bool = True,
+):
+    """The WHOLE batch-sharded decode iteration as ONE shard_map program:
+    embed, QKV, FFN, norms, unembed and greedy sampling all run on each
+    rank's ``B/n`` batch slice; only the per-layer attention boundary
+    (`paged_decode_attn_sharded`, armed through ``impl``) and the final
+    exchanges are collectives.
+
+    In-program epilogue (nothing batch-wide ever leaves the device mesh
+    replicated except tiny ids):
+
+      * sampling: each rank argmaxes its OWN logits slice
+        (`model.decode_sampled` — bit-identical to the engine's host
+        `_sample_token`) and the sampled ids are all_gathered so every rank
+        sees the full next-token vector — the in-program token exchange
+        that lets each master route its own KV appends;
+      * per-master KV-append routing: the step's new per-layer KV rows are
+        all_gathered over the batch axis and each rank `take`s the rows of
+        the requests IT masters (``route``, built by the executor from
+        `DecodeBatch.masters`) — the routed output lands master-major, each
+        master's rows physically on its own device, instead of the host
+        re-slicing a replicated tensor.
+
+    toks [B] int32 sharded over ``sp_axis`` (B % n == 0, bucket-padded);
+    n_cached_full [B] REPLICATED (ranks slice their own view and window
+    masking needs the full vector); k_pages/v_pages
+    [n, L, n_pages, P, KVH, D], table [n, B, max_pages], lengths [n, B],
+    page_pos [n, n_pages, P] (window only) — sharded over the leading rank
+    axis; route [n, R] int32 batch indices (R = bucketed max
+    requests-per-master, padding rows point at index 0 and are never read).
+    Returns (sampled ids [B] replicated, k_routed, v_routed
+    [L, n*R, 1, KVH, D] sharded master-major on the row axis)."""
+    from repro.core.paged_decode import SpmdPagedShards
+    from repro.kernels import ops
+    from repro.models.transformer import Cache
+
+    n = int(mesh.shape[sp_axis])
+    bb = int(toks.shape[0])
+    assert bb % n == 0 and int(k_pages.shape[0]) == n, (bb, k_pages.shape, n)
+    b_l = bb // n
+    ops.dispatch_counts["decode_iteration_spmd"] += 1
+    sp = sp_axis
+    has_pos = page_pos is not None
+
+    def body(prm, tk, ncf, kb, vb, tb, lb, rt, *pb):
+        # tk: this rank's batch slice [B/n]; kb/vb/tb/lb/pb: its pool-mirror
+        # view (leading shard dim 1); ncf: full replicated cached lengths
+        r = lax.axis_index(sp)
+        ncl = lax.dynamic_slice_in_dim(ncf, r * b_l, b_l, axis=0)
+        shards = SpmdPagedShards(kb, vb, tb, lb, pb[0] if has_pos else None)
+        impl.begin_step(
+            shards, axis_name=sp, n_ranks=n, query_pos=ncf, overlap=overlap,
+        )
+        try:
+            nxt, _, kvs = model.decode_sampled(prm, tk, Cache(length=ncl))
+        finally:
+            impl.end_step()
+        nxt_all = ops.all_gather(nxt, sp, axis=0)  # [B] tiny ids
+        k_all = ops.all_gather(kvs[0], sp, axis=1)  # [L, B, 1, KVH, D]
+        v_all = ops.all_gather(kvs[1], sp, axis=1)
+        k_rt = jnp.take(k_all, rt[0], axis=1)  # this master's rows [L, R,...]
+        v_rt = jnp.take(v_all, rt[0], axis=1)
+        return nxt_all, k_rt, v_rt
+
+    specs = [P(), P(sp), P(None), P(sp), P(sp), P(sp), P(sp), P(sp)]
+    args = [params, toks, n_cached_full, k_pages, v_pages, table, lengths,
+            route]
+    if has_pos:
+        specs.append(P(sp))
+        args.append(page_pos)
+    fn = _shmap(
+        body, mesh, in_specs=tuple(specs),
+        out_specs=(P(None), P(None, sp), P(None, sp)),
+    )
+    return fn(*args)
 
 
 class ESPAttnImpl(DefaultAttnImpl):

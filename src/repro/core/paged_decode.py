@@ -22,6 +22,11 @@ impl's ring split:
     `pmax`+`psum` on the weighted (o·exp(m-M), l·exp(m-M)) accumulator
     (`core.esp.paged_decode_spmd`), schedulable by XLA against independent
     compute unless ``overlap=False`` pins it behind a barrier.
+  * in-program batch-sharded (``axis_name=``, armed INSIDE the whole-
+    iteration shard_map body of `core.esp.paged_decode_iteration_spmd`):
+    each rank runs the non-attention stack for only its B/n batch slice and
+    the per-layer boundary is all_gather(q-slice) in / psum_scatter of the
+    LSE-merged output back to batch shards (LoongServe §4.2 multi-master).
 
 The impl subclasses `DefaultAttnImpl`, so outside a `begin_step`/`end_step`
 window (e.g. prefill, or oracle-style dense decode with an explicit cache) it
@@ -98,19 +103,35 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
         self._mesh = None  # SPMD mode: shard_map merge (esp.paged_decode_spmd)
         self._overlap = True
         self._impl = impl  # kernel impl override (None -> ops default)
+        self._axis = None  # in-program mode: batch-sharded iteration body
+        self._n_ranks = 1
+        self._qpos_full = None
 
-    def begin_step(self, shards, *, mesh=None, overlap: bool = True) -> None:
+    def begin_step(self, shards, *, mesh=None, overlap: bool = True,
+                   axis_name: Optional[str] = None, n_ranks: int = 1,
+                   query_pos=None) -> None:
         """Arm the paged path for one decode iteration.  decode_attn is
         called once per layer in stack order; the layer cursor indexes the
         per-layer storage planes.  With ``mesh=`` the shards must be one
         `SpmdPagedShards` (mesh-sharded over "data") and the per-layer merge
         runs as one shard_map collective; ``overlap=False`` pins that
-        collective behind an optimization barrier (benchmark baseline)."""
+        collective behind an optimization barrier (benchmark baseline).
+
+        With ``axis_name=`` the impl is armed INSIDE an already-manual
+        shard_map body (the batch-sharded iteration,
+        `esp.paged_decode_iteration_spmd`): shards are this rank's LOCAL
+        `SpmdPagedShards` view (leading shard dim 1), ``n_ranks`` the axis
+        size, and ``query_pos`` the FULL replicated [B] cached-length vector
+        (the all-gathered query needs full-batch masking while the model
+        stack only sees the rank's slice)."""
         self._shards = shards
         self._layer = 0
         self._mesh = mesh
         self._overlap = overlap
-        if mesh is not None:
+        self._axis = axis_name
+        self._n_ranks = n_ranks
+        self._qpos_full = query_pos
+        if mesh is not None or axis_name is not None:
             assert isinstance(shards, SpmdPagedShards), type(shards)
             self._n_planes = int(shards.k_pages.shape[1])
         else:
@@ -142,6 +163,9 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
             self._n_planes = None
             self._layer = 0
             self._overlap = True
+            self._axis = None
+            self._n_ranks = 1
+            self._qpos_full = None
 
     def decode_attn(self, q, k_cache, v_cache, k_new, v_new, cache_len, *,
                     window, softcap):
@@ -161,6 +185,23 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
         # the query's global position == cached token count (its own KV is
         # k_new, merged below) — window predicate qp - kp < window
         qpos = jnp.broadcast_to(jnp.asarray(cache_len), (b,)).astype(jnp.int32)
+        if self._axis is not None:
+            # in-program (batch-sharded) mode: already inside the iteration's
+            # shard_map body — q/k_new/v_new are this rank's batch slice, the
+            # boundary all_gathers q, computes the full-batch partial over the
+            # rank's local pool plane and psum_scatters the merged result
+            # back to batch shards (esp.paged_decode_attn_sharded)
+            from repro.core.esp import paged_decode_attn_sharded
+
+            s = self._shards
+            out = paged_decode_attn_sharded(
+                self._axis, self._n_ranks, q, k_new, v_new, self._qpos_full,
+                s.k_pages[0, li], s.v_pages[0, li], s.table[0], s.lengths[0],
+                s.pos[0] if s.pos is not None else None,
+                window=window, softcap=softcap, overlap=self._overlap,
+                impl=self._impl,
+            )
+            return out.astype(q.dtype)
         if self._mesh is not None:
             from repro.core.esp import paged_decode_spmd
 
@@ -169,7 +210,7 @@ class PagedDecodeAttnImpl(DefaultAttnImpl):
                 self._mesh, q, k_new, v_new, qpos,
                 s.k_pages[:, li], s.v_pages[:, li], s.table, s.lengths,
                 s.pos, window=window, softcap=softcap,
-                overlap=self._overlap,
+                overlap=self._overlap, impl=self._impl,
             )
             return out.astype(q.dtype)
         part = attn.partial_attention(q, k_new, v_new, None, softcap=softcap)

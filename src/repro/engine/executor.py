@@ -383,12 +383,29 @@ class MeshExecutor(LocalExecutor):
     Groups that cannot get one distinct mirror device per KV-holding
     instance fall back to the per-shard loop.
 
+    ``batch_shard=True`` (default) additionally BATCH-SHARDS the
+    non-attention stack (LoongServe §4.2 multi-master): each rank embeds,
+    runs FFN/norms, unembeds and greedy-samples only its B/n slice of the
+    decode batch — per-rank decode FLOPs ~1/n instead of n-fold replicated
+    — and the per-layer boundary becomes all_gather(q-slice) in /
+    `psum_scatter` of the LSE-merged output back to batch shards
+    (`core.esp.paged_decode_iteration_spmd`).  Sampled ids are exchanged
+    in-program and each rank gathers the new KV rows of the requests it
+    MASTERS (routing matrix from `DecodeBatch.masters`), so the routed
+    per-master append rows land master-major — sharded onto the masters'
+    own devices — instead of the host re-slicing a replicated tensor.
+    Params stay replicated over the decode mesh: batch sharding is data
+    parallelism, every rank runs the full layer stack on its slice, so no
+    parameter axis is sharded over "data".  ``batch_shard=False`` keeps
+    the PR 5 replicated-stack program (the benchmark's comparison arm).
+
     ``double_buffer=False`` degrades the ring to the sequential baseline
     (transfer strictly after compute) — the benchmark's comparison arm.
     """
 
     def __init__(self, engine, mesh=None, *, double_buffer: bool = True,
-                 spmd_decode: bool = True, decode_overlap: bool = True):
+                 spmd_decode: bool = True, decode_overlap: bool = True,
+                 batch_shard: bool = True):
         super().__init__(engine)
         if mesh is None:
             import jax
@@ -403,6 +420,7 @@ class MeshExecutor(LocalExecutor):
         self.double_buffer = double_buffer
         self.spmd_decode = spmd_decode
         self.decode_overlap = decode_overlap
+        self.batch_shard = batch_shard
         self._group_meshes: Dict[Tuple[int, ...], Any] = {}
         self._decode_meshes: Dict[Tuple[int, ...], Any] = {}
         self._decode_programs: Dict[Tuple, Any] = {}
@@ -508,11 +526,15 @@ class MeshExecutor(LocalExecutor):
             self._params_rep[mesh] = pr
         return pr
 
-    def _decode_program(self, bb: int, mpb: int, mesh):
+    def _decode_program(self, bb: int, mpb: int, mesh, rb=None):
         """Jitted whole-iteration decode program for one (batch bucket,
-        page bucket, mesh) tuple — O(log) compiled variants, like the
-        prefill program cache."""
-        key = (bb, mpb, mesh, self.decode_overlap)
+        page bucket, mesh[, route bucket]) tuple — O(log) compiled
+        variants, like the prefill program cache.  ``rb=None`` compiles the
+        replicated-stack program (every rank runs the full batch, per-layer
+        pmax+psum merge); ``rb`` set compiles the batch-sharded iteration
+        (`core.esp.paged_decode_iteration_spmd`) with R=rb routed KV-append
+        rows per master."""
+        key = (bb, mpb, mesh, self.decode_overlap, rb)
         fn = self._decode_programs.get(key)
         if fn is None:
             import jax
@@ -523,29 +545,47 @@ class MeshExecutor(LocalExecutor):
             model, impl = self.eng.model, self._paged_impl
             overlap = self.decode_overlap
 
-            def step(params, toks, n_cached, k_g, v_g, tbl_g, len_g, pos_g):
-                shards = SpmdPagedShards(k_g, v_g, tbl_g, len_g, pos_g)
-                impl.begin_step(shards, mesh=mesh, overlap=overlap)
-                try:
-                    logits, _, kvs = model.decode(
-                        params, toks, Cache(length=n_cached)
+            if rb is not None:
+                from repro.core.esp import paged_decode_iteration_spmd
+
+                def step(params, toks, n_cached, k_g, v_g, tbl_g, len_g,
+                         pos_g, route):
+                    return paged_decode_iteration_spmd(
+                        mesh, model, impl, params, toks, n_cached,
+                        k_g, v_g, tbl_g, len_g, pos_g, route,
+                        overlap=overlap,
                     )
-                finally:
-                    impl.end_step()
-                return logits, kvs
+            else:
+                def step(params, toks, n_cached, k_g, v_g, tbl_g, len_g,
+                         pos_g):
+                    shards = SpmdPagedShards(k_g, v_g, tbl_g, len_g, pos_g)
+                    impl.begin_step(shards, mesh=mesh, overlap=overlap)
+                    try:
+                        logits, _, kvs = model.decode(
+                            params, toks, Cache(length=n_cached)
+                        )
+                    finally:
+                        impl.end_step()
+                    return logits, kvs
 
             fn = self._decode_programs[key] = jax.jit(step)
         return fn
 
     def _decode_spmd_setup(self, g):
         """Assemble the SPMD decode call for one DecodeBatch: returns
-        (jitted program, concrete args) or None when the group cannot run
-        SPMD (single shard, unbound/aliased mirror devices).
+        (jitted program, concrete args, rowmap) or None when the group
+        cannot run SPMD (single shard, unbound/aliased mirror devices).
 
         The paged operands are assembled from the per-rank mirrors IN
         PLACE: each pool's `device_paged_kv` view becomes data-rank i's
         slice of one mesh-sharded array — the executor ships per-request
-        block-table rows (tiny) and ZERO KV bytes."""
+        block-table rows (tiny) and ZERO KV bytes.
+
+        ``rowmap`` is None for the replicated program; for the
+        batch-sharded program it maps rid -> row of the master-major
+        routed KV output (rank*rb + j, from the route matrix built out of
+        `DecodeBatch.masters` — a master not holding KV in this group
+        routes through rank 0)."""
         import jax
         import jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -571,6 +611,11 @@ class MeshExecutor(LocalExecutor):
         assert (covered == n_cached).all(), (covered, n_cached)
         n, b = len(infos), len(rids)
         bb = self._bucket(b, lo=1)
+        if self.batch_shard:
+            # each rank owns bb/n batch rows: round the bucket up to a
+            # multiple of the rank count (padded rows hold zero KV
+            # everywhere and their sampled tokens are discarded)
+            bb = -(-bb // n) * n
         mpb = self._bucket(max(t.shape[1] for _, t, _ in infos), lo=1)
         sh = NamedSharding(mesh, P("data"))
         kds, vds, pds = [], [], []
@@ -595,13 +640,37 @@ class MeshExecutor(LocalExecutor):
         toks[:b] = [r.output_tokens[-1] for r in g.requests]
         ncb = np.zeros(bb, np.int32)
         ncb[:b] = n_cached
-        fn = self._decode_program(bb, mpb, mesh)
-        args = (
+        rb = route = rowmap = None
+        if self.batch_shard:
+            # per-master KV-append routing: rank i gathers the new KV rows
+            # of the requests instance infos[i] masters, so the routed
+            # output lands master-major on the masters' own devices
+            inst_rank = {
+                p.instance_id: i for i, (p, _, _) in enumerate(infos)
+            }
+            per_rank: List[List[int]] = [[] for _ in range(n)]
+            owner_of: List[Tuple[int, int]] = []
+            for bi, r in enumerate(g.requests):
+                rank = inst_rank.get(g.masters.get(r.rid), 0)
+                owner_of.append((rank, len(per_rank[rank])))
+                per_rank[rank].append(bi)
+            rb = self._bucket(max(len(rows) for rows in per_rank), lo=1)
+            route = np.zeros((n, rb), np.int32)  # padding rows read row 0
+            for i, rows in enumerate(per_rank):
+                route[i, : len(rows)] = rows
+            rowmap = {
+                r.rid: rank * rb + j
+                for r, (rank, j) in zip(g.requests, owner_of)
+            }
+        fn = self._decode_program(bb, mpb, mesh, rb)
+        args = [
             self._replicated_params(mesh), jnp.asarray(toks),
             jnp.asarray(ncb), k_g, v_g, jax.device_put(tbl, sh),
             jax.device_put(lens, sh), pos_g,
-        )
-        return fn, args
+        ]
+        if route is not None:
+            args.append(jax.device_put(route, sh))
+        return fn, tuple(args), rowmap
 
     def decode_paged(self, g) -> None:
         """One shard_map decode iteration for the whole group: per layer,
@@ -612,12 +681,33 @@ class MeshExecutor(LocalExecutor):
         setup = self._decode_spmd_setup(g) if self.spmd_decode else None
         if setup is None:
             return super().decode_paged(g)
-        fn, args = setup
+        fn, args, rowmap = setup
         eng = self.eng
         prev_impl = eng.model.attn_impl
         eng.model.attn_impl = self._paged_impl
         try:
-            logits, kvs = fn(*args)
+            if rowmap is None:
+                logits, kvs = fn(*args)
+            else:
+                toks_next, k_rt, v_rt = fn(*args)
         finally:
             eng.model.attn_impl = prev_impl
-        self._emit_decoded(g, logits, kvs)
+        if rowmap is None:
+            self._emit_decoded(g, logits, kvs)
+        else:
+            self._emit_decoded_routed(g, toks_next, k_rt, v_rt, rowmap)
+
+    def _emit_decoded_routed(self, g, toks_next, k_rt, v_rt, rowmap) -> None:
+        """Batch-sharded epilogue: tokens were sampled IN-PROGRAM (each
+        rank argmaxed its own logits slice, ids exchanged by all_gather) and
+        the new per-layer KV arrives master-major pre-routed
+        [L, n*rb, 1, KVH, D] — this just appends each request's id and
+        stashes its routed KV rows for _on_decode_done to fill."""
+        eng = self.eng
+        toks = np.asarray(toks_next)
+        k_rt = np.asarray(k_rt, np.float32)
+        v_rt = np.asarray(v_rt, np.float32)
+        for b, r in enumerate(g.requests):
+            r.output_tokens.append(int(toks[b]))
+            row = rowmap[r.rid]
+            eng._pending_kv[r.rid] = (k_rt[:, row], v_rt[:, row])

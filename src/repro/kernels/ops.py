@@ -210,6 +210,38 @@ def pmax(operands, axis_name: str):
     return jax.lax.pmax(operands, axis_name)
 
 
+def psum_scatter(operands, axis_name: str, *, scatter_dimension: int = 0,
+                 tiled: bool = True):
+    """Counted `lax.psum_scatter`: the batch-sharded decode merge reduces
+    the weighted (o·exp(m-M), l·exp(m-M)) accumulators AND hands each rank
+    only its own batch slice of the result in one collective — the paper's
+    "send back partial results" addressed to the masters (§4.2) instead of
+    replicated everywhere.  Bytes are the per-rank payload CONTRIBUTED
+    (the full pre-scatter tensor), like `psum`."""
+    dispatch_counts["psum_scatter"] += 1
+    comm_bytes["psum_scatter"] += _payload_bytes(operands)
+    return jax.tree.map(
+        lambda x: jax.lax.psum_scatter(
+            x, axis_name, scatter_dimension=scatter_dimension, tiled=tiled
+        ),
+        operands,
+    )
+
+
+def all_gather(operands, axis_name: str, *, axis: int = 0, tiled: bool = True):
+    """Counted `lax.all_gather`: the batch-sharded decode boundary's q-slice
+    exchange (every rank needs the full-batch query against its local KV)
+    and the in-program sampled-token / new-KV exchanges go through here so
+    `comm_bytes` covers them.  Bytes are the per-rank payload contributed
+    (the LOCAL slice each rank injects)."""
+    dispatch_counts["all_gather"] += 1
+    comm_bytes["all_gather"] += _payload_bytes(operands)
+    return jax.tree.map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled),
+        operands,
+    )
+
+
 def count_transfer(key: str, operands) -> None:
     """Account an explicit host-driven device transfer (e.g. the per-shard
     decode loop's q broadcast / partial pull-home in `core.paged_decode`)

@@ -264,6 +264,50 @@ def paged_decode_merge_ref(
     return A.finalize_partial(part)
 
 
+def paged_decode_batch_sharded_ref(
+    q, k_new, v_new, shards, *, query_pos=None, window=None, softcap=None,
+):
+    """Dense oracle for the BATCH-SHARDED multi-master decode boundary
+    (`core.esp.paged_decode_attn_sharded`): emulates the collective
+    schedule in plain jnp with ``n = len(shards)`` virtual ranks.
+
+    Rank i holds shard i's paged KV and owns batch rows
+    ``[i*B/n, (i+1)*B/n)``.  The all_gather of the q-slices reconstitutes
+    the full-batch q (identical to ``q`` here), each rank's full-batch
+    partial is computed over its local shard, the psum_scatter is a
+    weighted sum over ranks followed by slicing each rank's own rows, and
+    every rank merges its slice with ITS batch slice of the new-token
+    partial.  Concatenating the per-rank slices gives the full [B,1,H,D]
+    output — the structural reference the shard_map program must match."""
+    n = len(shards)
+    b = q.shape[0]
+    assert b % n == 0, (b, n)
+    b_l = b // n
+    parts = [
+        paged_flash_decode_partial_ref(
+            q, kp, vp, bt, lens, pos, query_pos=query_pos, window=window,
+            softcap=softcap,
+        )
+        for kp, vp, bt, lens, pos in shards
+    ]
+    m_g = jnp.max(jnp.stack([p.m for p in parts]), axis=0)
+    m_safe = jnp.where(jnp.isinf(m_g), 0.0, m_g)
+    w = [jnp.where(jnp.isinf(p.m), 0.0, jnp.exp(p.m - m_safe)) for p in parts]
+    o_sum = sum(p.o * wi[..., None] for p, wi in zip(parts, w))
+    l_sum = sum(p.l * wi for p, wi in zip(parts, w))
+    outs = []
+    for r in range(n):
+        sl = slice(r * b_l, (r + 1) * b_l)
+        p_new = A.partial_attention(
+            q[sl], k_new[sl], v_new[sl], None, softcap=softcap
+        )
+        merged = A.merge_partial(
+            A.Partial(o_sum[sl], m_g[sl], l_sum[sl]), p_new
+        )
+        outs.append(A.finalize_partial(merged))
+    return jnp.concatenate(outs, axis=0)
+
+
 def paged_flash_decode_partial_ref(
     q,  # [B, 1, H, D]
     k_pages,  # [n_pages, P, KVH, D]

@@ -552,6 +552,19 @@ class Model:
         logits = self.unembed(params, x)[:, 0]
         return logits, new_cache, kvs
 
+    def decode_sampled(self, params, tokens, cache: Cache):
+        """Slice-aware decode entry: one decode step + greedy sampling for
+        whatever batch slice the caller holds.  Nothing in `decode` couples
+        rows, so inside the batch-sharded SPMD iteration each rank runs this
+        on its own B/n slice — embed/FFN/unembed/argmax cost scales down with
+        the slice while the armed attn impl pays the collective boundary.
+        `jnp.argmax` matches the engine's host `_sample_token`
+        (`np.argmax`) bit-exactly, first-max tie-break included, so the
+        in-program token exchange is token-parity-exact with the host path.
+        Returns (sampled ids [b] int32, updated cache, per-layer new KV)."""
+        logits, new_cache, kvs = self.decode(params, tokens, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache, kvs
+
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
     """Preallocated (padded) cache for the dense decode path."""

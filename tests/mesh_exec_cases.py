@@ -309,15 +309,118 @@ def case_decode_parity():
                     out, want, atol=2e-5,
                     err_msg=str((dop, window, softcap, overlap)),
                 )
+        # static-rank kernel specialization: the interpret-mode Pallas paged
+        # kernel dispatched through the per-rank lax.switch INSIDE the
+        # shard_map region (no XLA-fallback forcing) stays parity-exact
+        want = np.asarray(DefaultAttnImpl().decode_attn(
+            jnp.asarray(q), jnp.asarray(k_dense), jnp.asarray(v_dense),
+            jnp.asarray(k_new), jnp.asarray(v_new), cl,
+            window=None, softcap=None,
+        ))
+        out = np.asarray(jax.jit(
+            lambda q_, kn, vn, kg, vg, tg, lg: esp.paged_decode_spmd(
+                mesh, q_, kn, vn, cl, kg, vg, tg, lg, None,
+                impl="interpret",
+            )
+        )(jnp.asarray(q), jnp.asarray(k_new), jnp.asarray(v_new),
+          k_g, v_g, tbl_g, len_g))
+        np.testing.assert_allclose(
+            out, want, atol=2e-5, err_msg=f"interpret-switch dop={dop}"
+        )
     print("DECODE-PARITY-OK")
+
+
+def case_decode_shard_parity():
+    """BATCH-SHARDED multi-master decode boundary
+    (`esp.paged_decode_attn_sharded`: all_gather(q-slice) in, psum_scatter
+    of the LSE-merged output back to batch shards) == dense decode oracle
+    for DoP {2, 4} x {GQA, sliding window, logit softcap} x {overlapped,
+    barriered}, with q/k_new/v_new physically sharded over the batch axis;
+    the plain-jnp batch-sharded ref (`kernels/ref.py`) agrees too, and the
+    interpret-mode Pallas kernel through the per-rank switch stays exact."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.core.shmap import shmap
+    from repro.models.transformer import DefaultAttnImpl
+
+    h, kvh, d, page = 4, 2, 32, 4
+    lens = [13, 1, 29, 8, 22, 40, 5, 17]  # B=8: divisible by both DoPs
+    B = len(lens)
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(B, 1, h, d)).astype(np.float32))
+    k_new = jnp.asarray(rng.normal(size=(B, 1, kvh, d)).astype(np.float32))
+    v_new = jnp.asarray(rng.normal(size=(B, 1, kvh, d)).astype(np.float32))
+    cl = jnp.asarray(lens, jnp.int32)
+    for dop in (2, 4):
+        mesh = Mesh(np.asarray(jax.devices()[:dop]), ("data",))
+        k_dense, v_dense, shards = _build_paged_shards(
+            rng, dop, lens, kvh, d, page
+        )
+        k_g = jnp.asarray(np.stack([s[0] for s in shards]))
+        v_g = jnp.asarray(np.stack([s[1] for s in shards]))
+        tbl_g = jnp.asarray(np.stack([s[2] for s in shards]))
+        len_g = jnp.asarray(np.stack([s[3] for s in shards]))
+        pos_g = jnp.asarray(np.stack([s[4] for s in shards]))
+
+        def sharded(window, softcap, overlap, impl=None, _dop=dop,
+                    _mesh=mesh):
+            def body(qb, knb, vnb, kg, vg, tg, lg, pg):
+                out = esp.paged_decode_attn_sharded(
+                    "data", _dop, qb, knb, vnb, cl,
+                    kg[0], vg[0], tg[0], lg[0],
+                    pg[0] if window is not None else None,
+                    window=window, softcap=softcap, overlap=overlap,
+                    impl=impl,
+                )
+                return out.astype(qb.dtype)
+
+            fn = shmap(
+                body, _mesh,
+                in_specs=(P("data"),) * 8, out_specs=P("data"),
+            )
+            return np.asarray(jax.jit(fn)(
+                q, k_new, v_new, k_g, v_g, tbl_g, len_g, pos_g
+            ))
+
+        for window, softcap in [(None, None), (9, None), (None, 5.0)]:
+            want = np.asarray(DefaultAttnImpl().decode_attn(
+                q, jnp.asarray(k_dense), jnp.asarray(v_dense),
+                k_new, v_new, cl, window=window, softcap=softcap,
+            ))
+            ref_bs = np.asarray(kref.paged_decode_batch_sharded_ref(
+                q, k_new, v_new,
+                [(s[0], s[1], s[2], s[3], s[4]) for s in shards],
+                query_pos=cl, window=window, softcap=softcap,
+            ))
+            np.testing.assert_allclose(
+                ref_bs, want, atol=2e-5,
+                err_msg=f"batch-sharded-ref {(dop, window, softcap)}",
+            )
+            for overlap in (True, False):
+                out = sharded(window, softcap, overlap)
+                np.testing.assert_allclose(
+                    out, want, atol=2e-5,
+                    err_msg=str((dop, window, softcap, overlap)),
+                )
+        want = np.asarray(DefaultAttnImpl().decode_attn(
+            q, jnp.asarray(k_dense), jnp.asarray(v_dense),
+            k_new, v_new, cl, window=None, softcap=None,
+        ))
+        out = sharded(None, None, True, impl="interpret")
+        np.testing.assert_allclose(
+            out, want, atol=2e-5, err_msg=f"interpret-sharded dop={dop}"
+        )
+    print("DECODE-SHARD-PARITY-OK")
 
 
 def case_decode_e2e():
     """Engine decode through the MeshExecutor's SPMD program at DoP {2, 4}:
-    ZERO per-shard Python-loop merges (`decode_merge_loop`), the collective
-    merge dispatched and byte-counted (`psum`/`pmax`), distinct per-instance
-    mirror devices, token sequences == serial dense oracle — for the
-    overlapped arm, the barriered baseline, and (at DoP 2) the legacy
+    ZERO per-shard Python-loop merges (`decode_merge_loop`), distinct
+    per-instance mirror devices, token sequences == serial dense oracle —
+    for the default BATCH-SHARDED arms (whole iteration in-program: sampled
+    ids exchanged by all_gather, LSE-merge psum_scattered back to batch
+    shards, both byte-counted), the replicated PR 5 program
+    (``batch_shard=False``: pmax+psum merge), and (at DoP 2) the legacy
     per-shard loop with its q-broadcast / partial-home transfers counted."""
     from repro.engine.executor import MeshExecutor
 
@@ -332,6 +435,8 @@ def case_decode_e2e():
                                mesh=mesh)
         if arm == "barrier":
             eng.executor = MeshExecutor(eng, mesh, decode_overlap=False)
+        elif arm == "replicated":
+            eng.executor = MeshExecutor(eng, mesh, batch_shard=False)
         elif arm == "loop":
             eng.executor = MeshExecutor(eng, mesh, spmd_decode=False)
         rng = np.random.default_rng(31 + dop)
@@ -352,19 +457,92 @@ def case_decode_e2e():
         return dict(ops.dispatch_counts), dict(ops.comm_bytes)
 
     for dop in (2, 4):
+        # default arms are BATCH-SHARDED: the non-attention stack runs on
+        # B/n rows per rank, tokens are sampled in-program, and the decode
+        # collectives are the sharded boundary's all_gather/psum_scatter
         for arm in ("overlap", "barrier"):
             d, c = run_engine(dop, arm)
             assert d.get("decode_merge_loop", 0) == 0, (dop, arm, d)
-            assert d.get("paged_decode_spmd", 0) >= 1, (dop, arm, d)
-            assert d.get("psum", 0) >= 1 and d.get("pmax", 0) >= 1, d
-            assert c.get("psum", 0) > 0, c
+            assert d.get("paged_decode_spmd", 0) == 0, (dop, arm, d)
+            assert d.get("decode_iteration_spmd", 0) >= 1, (dop, arm, d)
+            assert d.get("paged_decode_sharded", 0) >= 1, (dop, arm, d)
+            assert d.get("psum_scatter", 0) >= 1, d
+            assert d.get("all_gather", 0) >= 1 and d.get("pmax", 0) >= 1, d
+            assert c.get("psum_scatter", 0) > 0, c
+            assert c.get("all_gather", 0) > 0, c
+        # PR 5 replicated-stack program still exact behind batch_shard=False
+        d, c = run_engine(dop, "replicated")
+        assert d.get("decode_merge_loop", 0) == 0, (dop, d)
+        assert d.get("decode_iteration_spmd", 0) == 0, (dop, d)
+        assert d.get("paged_decode_spmd", 0) >= 1, (dop, d)
+        assert d.get("psum", 0) >= 1 and d.get("pmax", 0) >= 1, d
+        assert c.get("psum", 0) > 0, c
     # pre-SPMD per-shard loop still exact, its decode comm now visible
     d, c = run_engine(2, "loop")
     assert d.get("paged_decode_spmd", 0) == 0, d
+    assert d.get("decode_iteration_spmd", 0) == 0, d
     assert d.get("decode_merge_loop", 0) >= 1, d
     assert c.get("decode_q_broadcast", 0) > 0, c
     assert c.get("decode_partial_home", 0) > 0, c
     print("DECODE-E2E-OK")
+
+
+def case_decode_flops():
+    """FLOP-census guard for the whole point of the batch sharding: the
+    compiled batch-sharded program's per-rank dot FLOPs
+    (`launch/hlo.py` census) are <= 1/n + eps of the replicated PR 5
+    program at DoP {2, 4} — the embed/FFN/unembed stack really runs on B/n
+    rows per rank, not just logically."""
+    from repro.engine.executor import MeshExecutor
+    from repro.engine.request import Phase, Request
+    from repro.launch.hlo import hlo_census
+    from repro.manager.scheduler import DecodeBatch
+
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    lengths = [33, 17, 50, 8, 21, 44, 12, 60]
+    page = 16
+    capacity = (-(-sum(lengths) // page) + 16) * page
+
+    def census(dop, batch_shard):
+        mesh = make_test_mesh(data=dop, model=8 // dop)
+        eng = LoongServeEngine(CFG, dop, capacity, store_values=True,
+                               model=model, params=params, page_size=page,
+                               mesh=mesh)
+        eng.executor = MeshExecutor(eng, mesh, batch_shard=batch_shard)
+        rng = np.random.default_rng(41)
+        reqs = []
+        for rid, ln in enumerate(lengths):
+            n = int(ln)
+            r = Request(input_len=n, max_new_tokens=8,
+                        prompt=rng.integers(0, CFG.vocab_size, n).tolist())
+            r.rid, r.generated, r.phase = rid, 1, Phase.DECODE
+            r.output_tokens = [int(rng.integers(0, CFG.vocab_size))]
+            plan = eng.pool.plan_placement(rid, list(range(n)), range(dop))
+            kv = rng.normal(size=(eng.pool.pools[0].n_attn, n,
+                                  CFG.n_kv_heads, CFG.head_dim))
+            eng.pool.place(plan, kv, kv + 1)
+            reqs.append(r)
+        g = DecodeBatch(reqs, list(range(dop)),
+                        {r.rid: r.rid % dop for r in reqs})
+        fn, args, _ = eng.executor._decode_spmd_setup(g)
+        prev = eng.model.attn_impl
+        eng.model.attn_impl = eng.executor._paged_impl
+        try:
+            txt = fn.lower(*args).compile().as_text()
+        finally:
+            eng.model.attn_impl = prev
+        return hlo_census(txt)["flops"]
+
+    for dop in (2, 4):
+        rep = census(dop, False)
+        shd = census(dop, True)
+        ratio = shd / rep
+        # the paged attention partial is full-B on every rank in BOTH
+        # programs (it is already 1/n-sized via the KV sharding), so the
+        # ratio sits a couple of percent above the ideal 1/n
+        assert ratio <= 1 / dop + 0.05, (dop, rep, shd, ratio)
+    print("DECODE-FLOPS-OK")
 
 
 CASES = {
@@ -373,6 +551,8 @@ CASES = {
     "checkpoint_restore": case_checkpoint_restore,
     "decode_parity": case_decode_parity,
     "decode_e2e": case_decode_e2e,
+    "decode_shard_parity": case_decode_shard_parity,
+    "decode_flops": case_decode_flops,
 }
 
 

@@ -9,7 +9,12 @@ zero in-process-replay dispatches and zero mirror re-uploads, and
 checkpoint/restore under the sharded per-device mirror — plus the ISSUE-5
 decode matrix: SPMD paged decode == dense oracle for DoP {2, 4} x {GQA,
 window, softcap} x {overlapped, barriered}, and engine decode through the
-one-shard_map-program path with zero per-shard Python-loop merges."""
+one-shard_map-program path with zero per-shard Python-loop merges — and
+the ISSUE-6 batch-sharded decode matrix: the all_gather/psum_scatter
+multi-master boundary == dense oracle on physically batch-sharded
+operands, engine e2e through the in-program sampling + routed-KV path,
+and the HLO dot-FLOP census showing per-rank decode FLOPs ~1/n of the
+replicated program."""
 import os
 import pathlib
 import subprocess
@@ -49,3 +54,11 @@ def test_mesh_decode_parity_matrix():
 
 def test_mesh_decode_e2e():
     _run_case("decode_e2e")
+
+
+def test_mesh_decode_shard_parity_matrix():
+    _run_case("decode_shard_parity")
+
+
+def test_mesh_decode_flop_census():
+    _run_case("decode_flops")
