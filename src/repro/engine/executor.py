@@ -66,6 +66,25 @@ class LocalExecutor:
                 self._paged_impl = PagedDecodeAttnImpl()
                 self._packed_prefill_impl = PackedPrefillAttnImpl()
 
+    # ------------------------------------------------------------ NaN guard
+    def _guard_logits(self, r, row):
+        """Value guard on one request's logits row: a NaN/inf row quarantines
+        ONLY that request (`engine._quarantine` — the completion handler
+        requeues it for recompute) instead of finishing it with a garbage
+        argmax or poisoning the batch.  Chaos injection (`_logit_poison`)
+        overwrites the row BEFORE the finite check, so the guard is
+        exercised by value exactly as a real kernel fault would present.
+        Returns the row, or None when the request was quarantined (caller
+        skips its token emission and KV stash)."""
+        eng = self.eng
+        if r.rid in eng._logit_poison:
+            eng._logit_poison.discard(r.rid)
+            row = np.full_like(row, np.nan)
+        if not np.isfinite(row).all():
+            eng._quarantine.add(r.rid)
+            return None
+        return row
+
     # ------------------------------------------------------------- buckets
     @staticmethod
     def _bucket(n: int, lo: int = 16) -> int:
@@ -196,7 +215,10 @@ class LocalExecutor:
             eng.model.attn_impl = prev_impl
         logits = np.asarray(logits)
         for b, r in enumerate(reqs):
-            r.output_tokens.append(eng._sample_token(logits[b]))
+            row = self._guard_logits(r, logits[b])
+            if row is None:
+                continue  # quarantined: no first token, engine requeues
+            r.output_tokens.append(eng._sample_token(row))
         if not eng.pool.pools[0].store_values:
             return
         # direct-to-pool paged KV writes: per instance, gather the packed
@@ -236,9 +258,10 @@ class LocalExecutor:
             ops.dispatch_counts["prefill_serial_model"] += 1
             toks = jnp.asarray(np.asarray(r.prompt, np.int32)[None])
             logits, cache = eng.model.prefill(eng.params, {"tokens": toks})
-            r.output_tokens.append(
-                eng._sample_token(np.asarray(logits[0, -1]))
-            )
+            row = self._guard_logits(r, np.asarray(logits[0, -1]))
+            if row is None:
+                continue  # quarantined: no first token, engine requeues
+            r.output_tokens.append(eng._sample_token(row))
             if cache.k is not None:
                 k = np.asarray(cache.k[:, 0], np.float32)  # [L, T, KVH, D]
                 v = np.asarray(cache.v[:, 0], np.float32)
@@ -313,7 +336,10 @@ class LocalExecutor:
         eng = self.eng
         logits = np.asarray(logits)
         for b, r in enumerate(g.requests):
-            r.output_tokens.append(eng._sample_token(logits[b]))
+            row = self._guard_logits(r, logits[b])
+            if row is None:
+                continue  # quarantined: no token, no KV stash
+            r.output_tokens.append(eng._sample_token(row))
             if kvs is not None:
                 eng._pending_kv[r.rid] = (
                     np.asarray(kvs[0][:, b], np.float32),  # [L, 1, KVH, D]
@@ -344,7 +370,10 @@ class LocalExecutor:
             logits, new_cache, kvs = eng.model.decode(
                 eng.params, jnp.asarray([last_tok], jnp.int32), cache
             )
-            r.output_tokens.append(eng._sample_token(np.asarray(logits[0])))
+            row = self._guard_logits(r, np.asarray(logits[0]))
+            if row is None:
+                continue  # quarantined: no token, no cache/KV update
+            r.output_tokens.append(eng._sample_token(row))
             if new_cache.ssm is not None:
                 eng._real_cache[r.rid] = new_cache.ssm
             if kvs is not None:
@@ -702,7 +731,12 @@ class MeshExecutor(LocalExecutor):
         rank argmaxed its own logits slice, ids exchanged by all_gather) and
         the new per-layer KV arrives master-major pre-routed
         [L, n*rb, 1, KVH, D] — this just appends each request's id and
-        stashes its routed KV rows for _on_decode_done to fill."""
+        stashes its routed KV rows for _on_decode_done to fill.
+
+        NOTE: the NaN-logit value guard cannot apply here — logits never
+        leave the program, only sampled ids do.  Chaos logit poisoning
+        targets the host-sampling paths (`_emit_decoded`/serial/packed);
+        `_logit_poison` entries are simply not consumed on this path."""
         eng = self.eng
         toks = np.asarray(toks_next)
         k_rt = np.asarray(k_rt, np.float32)

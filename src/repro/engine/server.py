@@ -51,6 +51,15 @@ class EngineMetrics:
     q_broadcast_bytes: int = 0
     prefill_iters: int = 0
     decode_iters: int = 0
+    # degradation-path counters (observability for planner/pool divergence
+    # and the chaos soak's determinism fingerprint)
+    dropped_migrations: int = 0  # planner-requested moves the pool refused
+    dispatch_retries: int = 0  # transient dispatch faults absorbed by retry
+    dispatch_declared_failures: int = 0  # retry budget exhausted -> failure
+    nan_quarantined: int = 0  # poisoned-logit requests requeued
+    preemptions: int = 0  # decode-OOM evictions (victim or self)
+    recomputed_tokens: int = 0  # tokens folded back into prefill recompute
+    backpressure_deferrals: int = 0  # scheduling rounds that deferred admits
 
     def summary(self) -> Dict[str, float]:
         fin = [r for r in self.finished if r.finish_time is not None]
@@ -61,6 +70,13 @@ class EngineMetrics:
             "reactive_migration_bytes": self.reactive_migration_bytes,
             "prefill_iters": self.prefill_iters,
             "decode_iters": self.decode_iters,
+            "dropped_migrations": self.dropped_migrations,
+            "dispatch_retries": self.dispatch_retries,
+            "dispatch_declared_failures": self.dispatch_declared_failures,
+            "nan_quarantined": self.nan_quarantined,
+            "preemptions": self.preemptions,
+            "recomputed_tokens": self.recomputed_tokens,
+            "backpressure_deferrals": self.backpressure_deferrals,
         }
         if fin:
             for name, fn in [
@@ -80,6 +96,16 @@ class EngineMetrics:
 
 _event_seq = itertools.count()
 
+#: bumped whenever the checkpoint layout changes incompatibly; `restore()`
+#: refuses stamps it does not understand instead of dying mid-unpickle later
+CHECKPOINT_FORMAT_VERSION = 1
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be restored: missing file, truncated/corrupt
+    pickle, or an incompatible format version.  The message always names the
+    offending path (and both versions on a mismatch)."""
+
 
 class BaseServingEngine:
     def __init__(
@@ -94,6 +120,9 @@ class BaseServingEngine:
         params=None,
         seed: int = 0,
         page_size: int = 1,
+        admission_watermark: float = 0.0,
+        dispatch_max_retries: int = 3,
+        dispatch_backoff: float = 1e-3,
     ):
         self.cfg = cfg
         self.n = n_instances
@@ -113,6 +142,24 @@ class BaseServingEngine:
         self.real = model is not None
         self.rng = np.random.default_rng(seed)
         self._req_index: Dict[int, Request] = {}
+        # admission backpressure: defer NEW prefills while fleet-wide free
+        # slots sit below this fraction of alive capacity (0 = disabled) —
+        # decode keeps draining and frees slots instead of the scheduler
+        # admitting prompts that would immediately OOM-preempt
+        self.admission_watermark = admission_watermark
+        # bounded retry-with-backoff on TransientDispatchError before the
+        # dispatching instance is declared failed
+        self.dispatch_max_retries = dispatch_max_retries
+        self.dispatch_backoff = dispatch_backoff
+        # observers called as hook(engine, kind, payload) after EVERY handled
+        # event (chaos injection, invariant sanitizer, tracing)
+        self.event_hooks: List[Any] = []
+        # rids whose NEXT logits row is overwritten with NaN (chaos
+        # injection); the value guard moves them into _quarantine
+        self._logit_poison: Set[int] = set()
+        # rids whose last logits were non-finite: requeued for recompute at
+        # the next completion processing instead of emitting garbage
+        self._quarantine: Set[int] = set()
 
     # ----------------------------------------------------------- submission
     def submit(self, req: Request, at: Optional[float] = None) -> None:
@@ -129,9 +176,35 @@ class BaseServingEngine:
         heapq.heappush(self.events, (t, next(_event_seq), kind, payload))
 
     # ------------------------------------------------------------ main loop
+    def _has_live_work(self) -> bool:
+        """Unfinished work that scheduling could still advance (subclasses
+        extend with their own queues)."""
+        return bool(self.pending)
+
+    def _next_horizon(self) -> Optional[float]:
+        """Earliest future time an alive instance frees up, or None.  Under
+        normal operation every busy interval is backed by a queued completion
+        event; this differs only when busy_until was inflated externally
+        (straggler injection, backoff charges)."""
+        ts = [
+            t for i, t in self.busy_until.items()
+            if i not in self.failed and t > self.clock and t != float("inf")
+        ]
+        return min(ts, default=None)
+
     def run(self, max_time: float = float("inf"), max_events: int = 2_000_000):
         n_ev = 0
-        while self.events and n_ev < max_events:
+        while n_ev < max_events:
+            if not self.events:
+                # liveness: the queue drained but live work remains (e.g. a
+                # straggler-inflated busy_until with no completion event
+                # behind it, or a stalled instance-less decode group).  Tick
+                # forward to the next idle horizon and re-enter scheduling
+                # instead of abandoning unfinished requests.
+                t = self._next_horizon()
+                if t is None or t > max_time or not self._has_live_work():
+                    break
+                self._push(t, "tick", None)
             t, seq, kind, payload = heapq.heappop(self.events)
             if t > max_time:
                 # keep the event for a later run()/restore
@@ -139,6 +212,8 @@ class BaseServingEngine:
                 break
             self.clock = max(self.clock, t)
             self._handle(kind, payload)
+            for hook in list(self.event_hooks):
+                hook(self, kind, payload)
             n_ev += 1
         return self.metrics
 
@@ -203,6 +278,7 @@ class BaseServingEngine:
         sequence) and move from the generation budget into the input — KV
         accounting stays exact (seq_len == recomputed prompt + new tokens,
         no double count of the folded prefix)."""
+        self.metrics.recomputed_tokens += req.seq_len
         req.n_evictions += 1
         req.phase = Phase.PENDING
         if req.prompt is not None and len(req.prompt) < req.seq_len:
@@ -250,6 +326,7 @@ class BaseServingEngine:
     # ------------------------------------------------------- checkpointing
     def checkpoint(self, path: str) -> None:
         state = {
+            "format_version": CHECKPOINT_FORMAT_VERSION,
             "clock": self.clock,
             "pending": self.pending,
             "events": self.events,
@@ -264,8 +341,35 @@ class BaseServingEngine:
             pickle.dump(state, f)
 
     def restore(self, path: str) -> None:
-        with open(path, "rb") as f:
-            state = pickle.load(f)
+        try:
+            with open(path, "rb") as f:
+                state = pickle.load(f)
+        except FileNotFoundError as e:
+            raise CheckpointError(f"checkpoint not found: {path}") from e
+        except (pickle.UnpicklingError, EOFError, AttributeError,
+                ImportError) as e:
+            raise CheckpointError(
+                f"checkpoint {path} is truncated or corrupt: {e}"
+            ) from e
+        if not isinstance(state, dict) or "format_version" not in state:
+            raise CheckpointError(
+                f"checkpoint {path} carries no format-version stamp "
+                "(pre-versioned or foreign file) — refusing to restore"
+            )
+        got = state["format_version"]
+        if got != CHECKPOINT_FORMAT_VERSION:
+            raise CheckpointError(
+                f"checkpoint {path} has format version {got}, this engine "
+                f"supports {CHECKPOINT_FORMAT_VERSION}"
+            )
+        missing = {
+            "clock", "pending", "events", "busy_until", "failed", "metrics",
+            "req_index", "pool_state",
+        } - set(state)
+        if missing:
+            raise CheckpointError(
+                f"checkpoint {path} is missing keys {sorted(missing)}"
+            )
         self.clock = state["clock"]
         self.pending = state["pending"]
         self.events = state["events"]
@@ -275,7 +379,10 @@ class BaseServingEngine:
         self._req_index = state["req_index"]
         for p, ps in zip(self.pool.pools, state["pool_state"]):
             p.load_state_dict(ps)
-        self._restore_extra(state["extra"])
+        # transient injection state never survives a restore
+        self._logit_poison.clear()
+        self._quarantine.clear()
+        self._restore_extra(state.get("extra"))
 
     def _checkpoint_extra(self) -> Any:
         return None
@@ -321,6 +428,25 @@ class LoongServeEngine(BaseServingEngine):
                 self.executor = LocalExecutor(self)
 
     # ------------------------------------------------------------- schedule
+    def _has_live_work(self) -> bool:
+        return bool(self.pending) or bool(self.ready_decode)
+
+    def _backpressured(self) -> bool:
+        """Admission backpressure watermark: True while fleet-wide free KV
+        slots sit below `admission_watermark` × alive capacity.  New prefills
+        are deferred (the pending queue is hidden from the planner) so the
+        decode fleet drains and frees slots, instead of admitting prompts
+        that would immediately bounce off the pool and OOM-preempt running
+        requests."""
+        if self.admission_watermark <= 0.0:
+            return False
+        alive = [
+            p for p in self.pool.pools if p.instance_id not in self.failed
+        ]
+        total = sum(p.capacity for p in alive)
+        free = sum(p.free_slots for p in alive)
+        return free < self.admission_watermark * total
+
     def _try_schedule(self) -> None:
         for _ in range(4):  # drain: admit more work onto leftover instances
             idle = [
@@ -333,8 +459,14 @@ class LoongServeEngine(BaseServingEngine):
             if not self.pending and not self.ready_decode:
                 return
             self.pending.sort(key=lambda r: r.arrival)
+            pending_view = self.pending
+            if pending_view and self._backpressured():
+                self.metrics.backpressure_deferrals += 1
+                pending_view = []
+                if not self.ready_decode:
+                    return
             plan = self.manager.schedule(
-                self.pending, self.ready_decode, idle, self.clock
+                pending_view, self.ready_decode, idle, self.clock
             )
             if not plan.prefill and not plan.decode and not plan.migrations:
                 return
@@ -347,6 +479,10 @@ class LoongServeEngine(BaseServingEngine):
             try:
                 moved = self.pool.migrate_request(m.rid, m.src, m.dsts)
             except OutOfSlots:
+                # planner/pool divergence: the move it asked for no longer
+                # fits — drop it (the request keeps serving from `src`) but
+                # COUNT it so the divergence is observable in summary()
+                self.metrics.dropped_migrations += 1
                 continue
             self.metrics.reactive_migration_bytes += moved
             t = self.sib.migration_time(m.n_tokens)
@@ -421,6 +557,61 @@ class LoongServeEngine(BaseServingEngine):
                 ):
                     self.ready_decode.remove(rg)
 
+    # ------------------------------------------------- dispatch fault paths
+    def _dispatch_with_retry(self, fn, instances: List[int],
+                             point: str) -> bool:
+        """Run one executor dispatch with bounded retry-with-backoff on
+        `TransientDispatchError` (chaos-injected or a genuinely flaky
+        backend).  The raise happens at the dispatch guard BEFORE any compute
+        or KV write, so retrying is side-effect-free.  Each retry charges
+        exponential backoff to the group's instances in sim-clock time.  On
+        budget exhaustion the first alive instance of the group is declared
+        failed (routing through the normal `_apply_failure` requeue path) and
+        False is returned — the caller requeues whatever that did not
+        cover."""
+        from repro.kernels import ops
+
+        for attempt in range(self.dispatch_max_retries + 1):
+            try:
+                ops.check_fault(point + "_dispatch")
+                fn()
+                return True
+            except ops.TransientDispatchError:
+                if attempt == self.dispatch_max_retries:
+                    break
+                self.metrics.dispatch_retries += 1
+                pause = self.dispatch_backoff * (2 ** attempt)
+                for i in instances:
+                    if i not in self.failed:
+                        self.busy_until[i] = (
+                            max(self.busy_until[i], self.clock) + pause
+                        )
+        self.metrics.dispatch_declared_failures += 1
+        victim = next((i for i in instances if i not in self.failed), None)
+        if victim is not None:
+            self._apply_failure(victim)
+        return False
+
+    def _drain_quarantine(self, requests: List[Request]) -> List[Request]:
+        """Remove NaN-quarantined requests from `requests`, requeueing ONLY
+        those for recompute (the rest of the batch is untouched).  Returns
+        the surviving requests."""
+        poisoned = [r for r in requests if r.rid in self._quarantine]
+        if not poisoned:
+            return requests
+        for r in poisoned:
+            self._quarantine.discard(r.rid)
+            self.metrics.nan_quarantined += 1
+            self._pending_kv.pop(r.rid, None)
+            self.pool.free_request(r.rid)
+            self._requeue_for_recompute(r)
+            if r not in self.pending:
+                self.pending.append(r)
+        self._drop_request_state([r.rid for r in poisoned])
+        return [r for r in requests if r.rid not in {
+            p.rid for p in poisoned
+        }]
+
     # --------------------------------------------------------- prefill done
     def _on_prefill_done(self, batch: PrefillBatch) -> None:
         # graceful in-flight failure (mirror of _on_decode_done): requests
@@ -458,7 +649,26 @@ class LoongServeEngine(BaseServingEngine):
         # proactive scale-down: KV lands in the already-reserved slots of the
         # target group during the ring pass — ZERO migration bytes.
         if self.real:
-            self._real_prefill(batch)
+            ok = self._dispatch_with_retry(
+                lambda: self._real_prefill(batch), batch.instances, "prefill"
+            )
+            if not ok:
+                # the prefill never ran: its reserved placement holds no
+                # written KV — requeue every request still in PREFILL (ones
+                # whose slots sat on the declared-failed instance were
+                # already requeued by _apply_failure)
+                for r in batch.requests:
+                    if r.phase is Phase.PREFILL:
+                        self.pool.free_request(r.rid)
+                        self._requeue_for_recompute(r)
+                        if r not in self.pending:
+                            self.pending.append(r)
+                return
+            # NaN guard tripped inside the executor: quarantined requests
+            # got no sampled token — requeue ONLY them, keep the batch
+            batch.requests = self._drain_quarantine(batch.requests)
+            if not batch.requests:
+                return
         for r in batch.requests:
             r.prefill_end = self.clock
             r.phase = Phase.DECODE
@@ -472,10 +682,15 @@ class LoongServeEngine(BaseServingEngine):
             if r.norm_output_latency():
                 self.manager.note_finished_decode(r.norm_output_latency())
         if live:
-            masters = self.manager._assign_masters(live, batch.scale_down_to)
-            self.ready_decode.append(
-                DecodeBatch(live, list(batch.scale_down_to), masters)
+            # always drop failed instances: an instance can die mid-flight
+            # while holding none of this batch's KV, in which case the
+            # alive-filter above never rebuilt the instance list — a dead
+            # member here would get prefill slots reserved on it next round
+            insts = [i for i in batch.scale_down_to if i not in self.failed]
+            masters = (
+                self.manager._assign_masters(live, insts) if insts else {}
             )
+            self.ready_decode.append(DecodeBatch(live, insts, masters))
 
     # ---------------------------------------------------------- decode done
     def _placement_order(self, r: Request, g: DecodeBatch) -> List[int]:
@@ -491,6 +706,65 @@ class LoongServeEngine(BaseServingEngine):
             if i not in g.instances and i != master
         ]
         return [i for i in order if i not in self.failed]
+
+    def _try_place_token(self, r: Request, g: DecodeBatch, pos: int) -> bool:
+        """Append one decoded token's KV slot on the first instance in the
+        request's placement order with room; real mode also writes the
+        pending KV through."""
+        for inst in self._placement_order(r, g):
+            try:
+                self.pool.pools[inst].alloc(r.rid, [pos])
+            except OutOfSlots:
+                continue
+            if self.real and r.rid in self._pending_kv:
+                k_new, v_new = self._pending_kv.pop(r.rid)
+                self.pool.pools[inst].fill(r.rid, [pos], k_new, v_new)
+            return True
+        return False
+
+    def _oom_victim(self, exclude: Set[int]) -> Optional[Request]:
+        """Decode-OOM preemption policy: pick the DECODE-phase request that
+        loses the least work — fewest generated tokens, youngest arrival and
+        highest rid as tiebreaks — never one in `exclude`."""
+        cands = [
+            q for rid, q in self._req_index.items()
+            if q.phase is Phase.DECODE and rid not in exclude
+        ]
+        if not cands:
+            return None
+        return min(cands, key=lambda q: (q.generated, -q.arrival, -q.rid))
+
+    def _preempt_and_place(self, r: Request, g: DecodeBatch,
+                           pos: int) -> bool:
+        """Free pool space for `r`'s token append by evicting victims
+        (lowest-progress first) and retrying placement.  Victims are never
+        taken from the group currently being processed — their tokens for
+        this iteration are already committed.  A victim mid-flight in
+        another launched group is safe: its launch stamp no longer matches
+        after recompute, so the stale completion is dropped."""
+        exclude = {q.rid for q in g.requests}
+        for _ in range(4):
+            victim = self._oom_victim(exclude)
+            if victim is None:
+                return False
+            exclude.add(victim.rid)
+            self.metrics.preemptions += 1
+            self._pending_kv.pop(victim.rid, None)
+            self.pool.free_request(victim.rid)
+            self._requeue_for_recompute(victim)
+            if victim not in self.pending:
+                self.pending.append(victim)
+            self._drop_request_state([victim.rid])
+            # purge the victim from waiting groups (mirrors _apply_failure)
+            for gg in list(self.ready_decode):
+                gg.requests = [
+                    q for q in gg.requests if q.phase is Phase.DECODE
+                ]
+                if not gg.requests:
+                    self.ready_decode.remove(gg)
+            if self._try_place_token(r, g, pos):
+                return True
+        return False
 
     def _on_decode_done(self, g: DecodeBatch) -> None:
         self._running_decode_ends.pop(id(g), None)
@@ -515,7 +789,31 @@ class LoongServeEngine(BaseServingEngine):
                 g.masters,
             )
         if self.real:
-            self._real_decode(g)
+            ok = self._dispatch_with_retry(
+                lambda: self._real_decode(g), g.instances, "decode"
+            )
+            if not ok:
+                # the iteration never ran (raise precedes any KV write):
+                # surviving members simply go back to the ready queue — a
+                # group left with no alive instances is revived by the
+                # scheduler's stalled-group path
+                live = [r for r in g.requests if r.phase is Phase.DECODE]
+                insts = [i for i in g.instances if i not in self.failed]
+                if live:
+                    self.ready_decode.append(DecodeBatch(live, insts, g.masters))
+                return
+        else:
+            # sim mode: poison short-circuits to the same quarantine path
+            # the real-mode value guard feeds
+            for r in g.requests:
+                if r.rid in self._logit_poison:
+                    self._logit_poison.discard(r.rid)
+                    self._quarantine.add(r.rid)
+        survivors = self._drain_quarantine(g.requests)
+        if not survivors:
+            return
+        if len(survivors) < len(g.requests):
+            g = DecodeBatch(survivors, g.instances, g.masters)
         done, live = [], []
         for r in g.requests:
             # the processed token's position (its KV is appended now)
@@ -529,19 +827,15 @@ class LoongServeEngine(BaseServingEngine):
                 self._pending_kv.pop(r.rid, None)
                 done.append(r)
                 continue
-            placed = False
-            for inst in self._placement_order(r, g):
-                try:
-                    self.pool.pools[inst].alloc(r.rid, [pos])
-                    if self.real and r.rid in self._pending_kv:
-                        k_new, v_new = self._pending_kv.pop(r.rid)
-                        self.pool.pools[inst].fill(r.rid, [pos], k_new, v_new)
-                    placed = True
-                    break
-                except OutOfSlots:
-                    continue
+            placed = self._try_place_token(r, g, pos)
             if not placed:
-                # fleet-wide OOM: evict & requeue (counts as recompute)
+                # fleet-wide OOM: preempt the youngest/lowest-progress decode
+                # request(s) OUTSIDE this group and retry, so work already
+                # deep into generation is not the one thrown away
+                placed = self._preempt_and_place(r, g, pos)
+            if not placed:
+                # no preemptable victim either: self-evict & requeue
+                self.metrics.preemptions += 1
                 self._pending_kv.pop(r.rid, None)
                 self.pool.free_request(r.rid)
                 self._requeue_for_recompute(r)
@@ -554,7 +848,13 @@ class LoongServeEngine(BaseServingEngine):
                 self.manager.note_finished_decode(r.norm_output_latency())
             self._real_cache.pop(r.rid, None)
         if live:
-            self.ready_decode.append(DecodeBatch(live, g.instances, g.masters))
+            # always re-filter failed instances (an instance that died
+            # mid-flight holding none of this group's KV is not caught by
+            # the alive-filter above)
+            self.ready_decode.append(DecodeBatch(
+                live, [i for i in g.instances if i not in self.failed],
+                g.masters,
+            ))
 
     # ----------------------------------------------------------- real compute
     # Thin dispatch only: the bodies live in engine/executor.py behind the

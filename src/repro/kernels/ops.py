@@ -39,6 +39,36 @@ from repro.models.attention import Partial
 _VALID_IMPLS = ("xla", "pallas", "interpret")
 
 
+class TransientDispatchError(RuntimeError):
+    """A kernel dispatch failed transiently (injected by the chaos harness
+    or raised by a flaky backend).  The engine retries with bounded backoff
+    before declaring the instance failed — see engine/server.py."""
+
+
+# Fault-injection seam: when set, every dispatch entry point (and the
+# executors' per-batch dispatch guards) calls the hook with a point name
+# BEFORE doing any work; the hook may raise TransientDispatchError to
+# simulate a flaky launch.  Raising happens before any compute or KV write,
+# so a retried dispatch is side-effect free.  `None` (the default) is
+# zero-overhead beyond one attribute read.
+_fault_hook = None
+
+
+def set_fault_hook(hook) -> None:
+    """Install (or clear, with None) the dispatch fault hook."""
+    global _fault_hook
+    _fault_hook = hook
+
+
+def check_fault(point: str) -> None:
+    """Raise-point consulted at the top of every dispatch entry.  NOTE:
+    jitted callers only reach the ops wrappers at trace time (cached
+    programs never re-enter Python), so the executors additionally call
+    this per batch dispatch — those are the reliable injection points."""
+    if _fault_hook is not None:
+        _fault_hook(point)
+
+
 def _impl_from_env() -> str:
     impl = os.environ.get("REPRO_KERNEL_IMPL", "xla")
     if impl not in _VALID_IMPLS:
@@ -79,6 +109,7 @@ def attention(
     impl: Optional[str] = None, block_q: int = 128, block_k: int = 128,
 ):
     impl = impl or _DEFAULT_IMPL
+    check_fault("attention")
     dispatch_counts["attention"] += 1
     if impl == "xla":
         return ref.striped_flash_attention_ref(
@@ -97,6 +128,7 @@ def decode_partial(
 ) -> Partial:
     """Per-request decode over a dense KV shard (legacy gather-dense path)."""
     impl = impl or _DEFAULT_IMPL
+    check_fault("decode_partial")
     dispatch_counts["decode_partial"] += 1
     if impl == "xla":
         return ref.flash_decode_partial_ref(
@@ -118,6 +150,7 @@ def prefill_packed(
     ``max_seq_len`` (static) bounds the banded XLA fallback's reach; the
     Pallas kernel skips non-interacting tiles from the prefetched offsets."""
     impl = impl or _DEFAULT_IMPL
+    check_fault("prefill_packed")
     dispatch_counts["prefill_packed"] += 1
     if impl == "xla":
         return ref.packed_prefill_banded(
@@ -147,6 +180,7 @@ def prefill_ring_chunk(
     ``carry=None`` starts an empty state (m=-inf).  Finalize after the last
     step with ``o / l`` (l==0 rows are bucket padding)."""
     impl = impl or _DEFAULT_IMPL
+    check_fault("prefill_ring_chunk")
     dispatch_counts["prefill_ring_chunk"] += 1
     if carry is None:
         tl, h = q.shape[0], q.shape[1]
@@ -257,6 +291,7 @@ def paged_decode_partial(
     """Batched ragged decode over the paged pool: ONE launch for every
     request of this instance (see kernels/paged_flash_decode.py)."""
     impl = impl or _DEFAULT_IMPL
+    check_fault("paged_decode_partial")
     dispatch_counts["paged_decode_partial"] += 1
     if impl == "xla":
         return ref.paged_flash_decode_partial_ref(

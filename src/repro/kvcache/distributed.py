@@ -93,6 +93,10 @@ class DistributedKVPool:
         """
         positions = list(positions)
         n = len(positions)
+        # dedupe targets (order-preserving): duplicates would share one
+        # assignment key but take two cursor passes below — the second pass
+        # OVERWRITES the first instance's token range and silently drops it
+        target_instances = list(dict.fromkeys(target_instances))
         free = {i: self.pools[i].free_slots for i in target_instances}
         if sum(free.values()) < n:
             raise OutOfSlots(
@@ -173,12 +177,24 @@ class DistributedKVPool:
         plan = self.plan_placement(
             request_id, positions, [d for d in dst_candidates if d != src]
         )
+        # transactional: land every destination BEFORE freeing the source
+        # copy, rolling fresh destinations back on a mid-place failure — a
+        # refused migration must never lose tokens (the engine drops it and
+        # keeps serving from src)
+        fresh = [
+            i for i in plan.instances() if not self.pools[i].tokens_of(request_id)
+        ]
+        try:
+            if k is not None and pool.store_values:
+                pos_idx = {p: i for i, p in enumerate(positions)}
+                self.place(plan, k, v, pos_idx)
+            else:
+                self.place(plan)
+        except Exception:
+            for i in fresh:
+                self.pools[i].free_request(request_id)
+            raise
         pool.free_request(request_id)
-        if k is not None and pool.store_values:
-            pos_idx = {p: i for i, p in enumerate(positions)}
-            self.place(plan, k, v, pos_idx)
-        else:
-            self.place(plan)
         moved = len(positions) * pool.bytes_per_slot
         self.migrated_bytes += moved
         return moved

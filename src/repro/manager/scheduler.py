@@ -265,12 +265,15 @@ class GlobalManager:
 
         # preempt instances with the most unused slots; migrate their decode
         # KV away instead of evicting when possible (§5.2)
-        decode_insts = [
+        # deduped: an instance can transiently sit in two groups (stalled
+        # groups under failure churn) — duplicate entries here would emit
+        # migrations with duplicate destinations
+        decode_insts = list(dict.fromkeys(
             i
             for g in decode_groups
             if g not in preempt_groups
             for i in g.instances
-        ]
+        ))
         candidates = sorted(
             (i for i in decode_insts if i not in ep),
             key=lambda i: -self.pool.pools[i].free_slots,
@@ -279,7 +282,10 @@ class GlobalManager:
             inst = candidates.pop(0)
             others = [j for j in decode_insts if j != inst and j not in ep]
             moved_ok = True
-            for rid in self.pool.pools[inst].requests():
+            # rid < 0 is foreign occupancy (not engine-owned, e.g. chaos
+            # ballast): immovable — plan around it, never migrate it
+            movable = [r for r in self.pool.pools[inst].requests() if r >= 0]
+            for rid in movable:
                 toks = len(self.pool.pools[inst].tokens_of(rid))
                 dst_free = sum(self.pool.pools[j].free_slots for j in others)
                 if toks > dst_free:
@@ -287,7 +293,7 @@ class GlobalManager:
                     break
             if not moved_ok:
                 continue
-            for rid in self.pool.pools[inst].requests():
+            for rid in movable:
                 toks = len(self.pool.pools[inst].tokens_of(rid))
                 plan.migrations.append(Migration(rid, inst, list(others), toks))
             ep.append(inst)
@@ -317,6 +323,8 @@ class GlobalManager:
             if self.pool.pools[e_min].used > dst_free:
                 break
             for rid in self.pool.pools[e_min].requests():
+                if rid < 0:  # foreign occupancy — immovable
+                    continue
                 toks = len(self.pool.pools[e_min].tokens_of(rid))
                 plan.migrations.append(Migration(rid, e_min, list(others), toks))
             ep.append(e_min)

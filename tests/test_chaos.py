@@ -1,0 +1,376 @@
+"""Chaos harness + invariant sanitizer: seeded fault-injection soaks with
+zero-violation/zero-leak acceptance, bit-for-bit determinism, real-mode
+oracle parity under injected NaNs/faults/pressure, and unit coverage of
+every graceful-degradation path (retry, quarantine, preemption,
+backpressure, dropped migration, checkpoint taxonomy, liveness tick)."""
+import os
+import pickle
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosConfig, ChaosMonkey
+from repro.configs import REGISTRY, reduced
+from repro.data import poisson_workload
+from repro.engine.invariants import InvariantChecker, InvariantViolation
+from repro.engine.request import Phase, Request
+from repro.engine.server import (
+    CHECKPOINT_FORMAT_VERSION,
+    CheckpointError,
+    LoongServeEngine,
+)
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kvcache.distributed import DistributedKVPool
+from repro.kvcache.pool import OutOfSlots
+from repro.models import build_model
+
+CFG = REGISTRY["lwm-7b"]
+
+# CI's chaos-soak job sweeps this over extra fixed seeds; any seed must
+# satisfy the same acceptance (zero violations, zero leaks, all finish)
+SOAK_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "11"))
+
+SOAK_RATES = dict(
+    fail_rate=0.02, rejoin_rate=0.06, straggler_rate=0.05, slowdown_rate=0.02,
+    pressure_rate=0.05, release_rate=0.04, dispatch_fault_rate=0.25,
+    nan_rate=0.03, min_alive=2,
+)
+
+
+def _armed(eng, chaos_cfg, seed):
+    """Chaos FIRST, checker SECOND: the sanitizer validates post-injection
+    state after every event."""
+    monkey = ChaosMonkey(eng, chaos_cfg, seed=seed)
+    chk = InvariantChecker(eng)
+    monkey.arm()
+    chk.arm()
+    return monkey, chk
+
+
+def _sim_soak(seed, *, n_req=60, max_events=3000):
+    eng = LoongServeEngine(CFG, 6, 24_000, admission_watermark=0.1)
+    reqs = poisson_workload("mixed", n_req, rate=2.0, seed=11, max_len=16_000)
+    for r in reqs:
+        eng.submit(r)
+    monkey, chk = _armed(eng, ChaosConfig(**SOAK_RATES), seed)
+    eng.run(max_events=max_events)
+    monkey.disarm()
+    eng.run()
+    return eng, reqs, monkey, chk
+
+
+# --------------------------------------------------------------------- soaks
+def test_sim_chaos_soak_zero_violations_zero_leaks():
+    """Capstone soak: thousands of sanitizer checks under all sim-applicable
+    injectors, every request completes, nothing leaks."""
+    eng, reqs, monkey, chk = _sim_soak(seed=SOAK_SEED)
+    assert chk.checks >= 2000
+    assert all(r.phase is Phase.FINISHED for r in reqs)
+    assert chk.leaked_slots() == 0
+    assert eng.pool.total_used == 0
+    actions = {t[1] for t in monkey.trace}
+    # dispatch faults need real-mode dispatch guards (covered below); all
+    # other injectors must have fired in the soak
+    for a in ("fail", "rejoin", "straggle", "slowdown", "pressure",
+              "release", "poison"):
+        assert a in actions, f"injector {a!r} never fired"
+    m = eng.metrics.summary()
+    for k in ("dropped_migrations", "dispatch_retries",
+              "dispatch_declared_failures", "nan_quarantined", "preemptions",
+              "recomputed_tokens", "backpressure_deferrals"):
+        assert k in m
+
+
+def test_chaos_same_seed_identical_trace_and_metrics():
+    """Determinism: one rng stream drives every injection decision, so the
+    same (seed, workload, rates) replays bit-for-bit."""
+    runs = []
+    for _ in range(2):
+        eng, reqs, monkey, chk = _sim_soak(seed=7, n_req=25, max_events=800)
+        assert all(r.phase is Phase.FINISHED for r in reqs)
+        assert chk.leaked_slots() == 0
+        runs.append((monkey.trace_fingerprint(), eng.metrics.summary()))
+    assert runs[0][0] == runs[1][0]
+    assert runs[0][1] == runs[1][1]
+    # and a different seed takes a different path
+    _, _, other, _ = _sim_soak(seed=8, n_req=25, max_events=800)
+    assert other.trace_fingerprint() != runs[0][0]
+
+
+@pytest.fixture(scope="module")
+def real_model():
+    cfg = reduced(CFG)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _real_workload(cfg, eng, n=10, seed=7):
+    rng = np.random.default_rng(seed)
+    reqs, orig = [], {}
+    for i in range(n):
+        ilen = int(rng.integers(16, 49))
+        mnt = int(rng.integers(4, 9))
+        prompt = rng.integers(0, cfg.vocab_size, ilen).tolist()
+        r = Request(input_len=ilen, max_new_tokens=mnt, arrival=i * 0.01,
+                    prompt=list(prompt))
+        reqs.append(r)
+        eng.submit(r)
+        orig[r.rid] = (list(prompt), mnt)
+    return reqs, orig
+
+
+def _assert_oracle_parity(cfg, model, params, reqs, orig):
+    """Every request's emitted tokens must match the serial dense-cache
+    oracle on its ORIGINAL prompt — chaos (evictions, recomputes, retries,
+    quarantines) may reshuffle work but never change tokens."""
+    for r in reqs:
+        prompt0, mnt0 = orig[r.rid]
+        oracle = kref.serial_decode_oracle(model, params, prompt0, mnt0 - 1)
+        assert list(r.output_tokens) == list(oracle), r.rid
+
+
+def test_real_chaos_soak_oracle_parity(real_model):
+    """Real-mode soak: all six injectors (incl. dispatch faults + NaN
+    poison), zero violations/leaks, and bit-for-bit token parity with the
+    serial oracle for every request."""
+    cfg, model, params = real_model
+    eng = LoongServeEngine(cfg, 3, 600, store_values=True, model=model,
+                           params=params, admission_watermark=0.15)
+    reqs, orig = _real_workload(cfg, eng)
+    chaos = ChaosConfig(
+        fail_rate=0.05, rejoin_rate=0.3, straggler_rate=0.2,
+        slowdown_rate=0.1, pressure_rate=0.25, release_rate=0.15,
+        ballast_frac=0.3, dispatch_fault_rate=0.2, nan_rate=0.12,
+        min_alive=2,
+    )
+    monkey, chk = _armed(eng, chaos, seed=5)
+    eng.run(max_events=300)
+    monkey.disarm()
+    eng.run()
+    assert all(r.phase is Phase.FINISHED for r in reqs)
+    assert chk.leaked_slots() == 0
+    assert eng.pool.total_used == 0
+    actions = {t[1] for t in monkey.trace}
+    for a in ("fail", "rejoin", "straggle", "slowdown", "pressure",
+              "dispatch_fault", "poison"):
+        assert a in actions, f"injector {a!r} never fired"
+    assert eng.metrics.dispatch_retries > 0
+    assert eng.metrics.nan_quarantined > 0
+    _assert_oracle_parity(cfg, model, params, reqs, orig)
+
+
+# ---------------------------------------------------- degradation unit paths
+def test_liveness_tick_revives_stalled_engine():
+    """busy_until inflated with no completion event behind it (the straggler
+    injection shape): the run loop must tick to the next idle horizon and
+    finish the work instead of draining the queue and abandoning it."""
+    eng = LoongServeEngine(CFG, 2, 1000)
+    r = Request(input_len=50, max_new_tokens=4, arrival=0.0)
+    eng.submit(r)
+    for i in range(eng.n):
+        eng.busy_until[i] = 100.0
+    m = eng.run()
+    assert len(m.finished) == 1
+    assert eng.clock >= 100.0  # finished AFTER the stall horizon
+
+
+def test_decode_oom_preempts_and_recomputes():
+    """Foreign memory pressure mid-decode shrinks the pool under an admitted
+    request: the token append must preempt/evict-recompute, never crash or
+    emit different tokens."""
+    eng = LoongServeEngine(CFG, 1, 2000)
+    reqs = [Request(input_len=100, max_new_tokens=100, arrival=0.0)
+            for _ in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    state = {"phase": 0}
+
+    def hook(e, kind, payload):
+        if kind != "decode_done":
+            return
+        if state["phase"] == 0:  # squeeze: leave < max_new free slots
+            e.pool.pools[0].alloc(-99, list(range(1880)))
+            state["phase"] = 1
+        elif state["phase"] == 1 and e.metrics.preemptions > 0:
+            e.pool.pools[0].free_request(-99)  # pressure subsides
+            e._push(e.clock + 1e-3, "tick", None)
+            state["phase"] = 2
+
+    eng.event_hooks.append(hook)
+    m = eng.run()
+    assert state["phase"] == 2
+    assert m.preemptions >= 1
+    assert m.recomputed_tokens > 0
+    assert len(m.finished) == 2
+    assert eng.pool.total_used == 0
+
+
+def test_backpressure_defers_admission_then_drains():
+    eng = LoongServeEngine(CFG, 2, 2000, admission_watermark=0.99)
+    reqs = [Request(input_len=150, max_new_tokens=10, arrival=i * 0.01)
+            for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    m = eng.run()
+    assert m.backpressure_deferrals > 0
+    assert len(m.finished) == 4
+
+
+def test_dropped_migration_counted_not_fatal():
+    """A migration refused by the pool (OutOfSlots) is dropped and counted;
+    the request keeps serving from its source instance."""
+    eng = LoongServeEngine(CFG, 4, 8000)
+    reqs = poisson_workload("mixed", 30, rate=2.0, seed=3, max_len=6000)
+    for r in reqs:
+        eng.submit(r)
+    attempts = [0]
+
+    def refuse(rid, src, dsts):
+        attempts[0] += 1
+        raise OutOfSlots("forced refusal")
+
+    orig = eng.pool.migrate_request
+    eng.pool.migrate_request = refuse
+    monkey, chk = _armed(
+        eng,
+        ChaosConfig(fail_rate=0.03, rejoin_rate=0.1, pressure_rate=0.08,
+                    release_rate=0.06, min_alive=2),
+        seed=4,
+    )
+    eng.run(max_events=1500)
+    monkey.disarm()
+    eng.pool.migrate_request = orig
+    m = eng.run()
+    assert attempts[0] > 0
+    assert m.dropped_migrations == attempts[0]
+    assert len(m.finished) == len(reqs)
+    assert chk.leaked_slots() == 0
+
+
+def test_migration_is_transactional_on_refusal():
+    """plan_placement raising mid-migration must leave the source copy
+    intact (no token loss) and no partial destination copies."""
+    pool = DistributedKVPool(CFG, 3, 100, store_values=False)
+    pool.pools[0].alloc(1, range(80))
+    pool.pools[1].alloc(-1, range(95))  # foreign pressure fills the dsts
+    pool.pools[2].alloc(-2, range(95))
+    with pytest.raises(OutOfSlots):
+        pool.migrate_request(1, 0, [1, 2])
+    assert len(pool.pools[0].tokens_of(1)) == 80  # source untouched
+    assert not pool.pools[1].tokens_of(1)
+    assert not pool.pools[2].tokens_of(1)
+    assert pool.migrated_bytes == 0
+
+
+def test_checkpoint_error_taxonomy(tmp_path):
+    eng = LoongServeEngine(CFG, 2, 1000)
+    with pytest.raises(CheckpointError, match="not found"):
+        eng.restore(str(tmp_path / "nope.ckpt"))
+
+    corrupt = tmp_path / "corrupt.ckpt"
+    corrupt.write_bytes(b"\x80\x04 this is not a pickle")
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        eng.restore(str(corrupt))
+
+    unstamped = tmp_path / "unstamped.ckpt"
+    with open(unstamped, "wb") as f:
+        pickle.dump({"clock": 0.0}, f)
+    with pytest.raises(CheckpointError, match="format-version stamp"):
+        eng.restore(str(unstamped))
+
+    future = tmp_path / "future.ckpt"
+    with open(future, "wb") as f:
+        pickle.dump({"format_version": CHECKPOINT_FORMAT_VERSION + 1}, f)
+    with pytest.raises(CheckpointError, match="format version"):
+        eng.restore(str(future))
+
+    # a good checkpoint still restores after all those rejections
+    good = tmp_path / "good.ckpt"
+    eng.submit(Request(input_len=40, max_new_tokens=4, arrival=0.0))
+    eng.checkpoint(str(good))
+    eng2 = LoongServeEngine(CFG, 2, 1000)
+    eng2.restore(str(good))
+    assert len(eng2.run().finished) == 1
+
+
+def test_nan_quarantine_recomputes_to_oracle_tokens(real_model):
+    """A poisoned logits row quarantines ONLY that request; after requeue +
+    recompute its tokens still match the oracle exactly."""
+    cfg, model, params = real_model
+    eng = LoongServeEngine(cfg, 2, 600, store_values=True, model=model,
+                           params=params)
+    reqs, orig = _real_workload(cfg, eng, n=2, seed=3)
+    eng._logit_poison.add(reqs[0].rid)
+    m = eng.run()
+    assert len(m.finished) == 2
+    assert m.nan_quarantined == 1
+    assert eng.pool.total_used == 0
+    _assert_oracle_parity(cfg, model, params, reqs, orig)
+
+
+def test_dispatch_retry_then_declared_failure(real_model):
+    """Transient dispatch faults are retried with backoff; a persistent
+    fault (> max retries consecutive) declares the instance failed and the
+    work relocates — tokens still match the oracle either way."""
+    cfg, model, params = real_model
+
+    # a) transient burst shorter than the retry budget: retried, no failure
+    eng = LoongServeEngine(cfg, 3, 600, store_values=True, model=model,
+                           params=params)
+    reqs, orig = _real_workload(cfg, eng, n=3, seed=9)
+    calls = [0]
+
+    def burst(point):
+        if point == "decode_dispatch":
+            calls[0] += 1
+            if calls[0] <= 2:
+                raise ops.TransientDispatchError("test burst")
+
+    ops.set_fault_hook(burst)
+    try:
+        m = eng.run()
+    finally:
+        ops.set_fault_hook(None)
+    assert len(m.finished) == 3
+    assert m.dispatch_retries >= 2
+    assert m.dispatch_declared_failures == 0
+    _assert_oracle_parity(cfg, model, params, reqs, orig)
+
+    # b) persistent fault: retries exhaust, instance declared failed,
+    # requests relocate to the survivors and still finish correctly
+    eng = LoongServeEngine(cfg, 3, 600, store_values=True, model=model,
+                           params=params)
+    reqs, orig = _real_workload(cfg, eng, n=3, seed=9)
+    calls = [0]
+
+    def persistent(point):
+        if point == "decode_dispatch":
+            calls[0] += 1
+            if calls[0] <= eng.dispatch_max_retries + 1:
+                raise ops.TransientDispatchError("test persistent")
+
+    ops.set_fault_hook(persistent)
+    try:
+        m = eng.run()
+    finally:
+        ops.set_fault_hook(None)
+    assert len(m.finished) == 3
+    assert m.dispatch_declared_failures == 1
+    assert len(eng.failed) == 1
+    _assert_oracle_parity(cfg, model, params, reqs, orig)
+
+
+def test_invariant_checker_flags_manual_leak():
+    """Negative control: the sanitizer itself must fire on a genuinely
+    inconsistent state (slots held by a rid the engine does not know)."""
+    eng = LoongServeEngine(CFG, 2, 1000)
+    eng.submit(Request(input_len=40, max_new_tokens=4, arrival=0.0))
+    eng.run()
+    chk = InvariantChecker(eng)
+    chk.check()  # clean state passes
+    eng.pool.pools[0].alloc(12345, [0, 1, 2])
+    with pytest.raises(InvariantViolation, match=r"\[I1\]"):
+        chk.check()

@@ -62,3 +62,7 @@ def test_mesh_decode_shard_parity_matrix():
 
 def test_mesh_decode_flop_census():
     _run_case("decode_flops")
+
+
+def test_mesh_join_instance_recovery():
+    _run_case("join_instance")
