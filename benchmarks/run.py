@@ -676,6 +676,162 @@ def bench_prefill_ring(quick: bool = False):
     )
 
 
+# ------------------------------------------- unified mixed prefill+decode
+
+
+def bench_mixed(quick: bool = False):
+    """Mixed continuous-batching workload on the REAL engine: B=8 short
+    requests are mid-decode when ONE long prompt arrives whose placement
+    must span every instance.  Sequential baseline (``prefill_chunk_tokens``
+    unset): the monolithic prefill annexes the decode instances and token
+    emission stalls for the whole prompt.  Unified arm: the prefill runs as
+    a chain of bounded chunks and the decode rows RIDE each fused iteration,
+    so the worst-case time-between-tokens collapses from one-full-prefill to
+    one-chunk.  Reports decode TBT p50/p99 (engine-clock emission
+    timestamps), the p99 ratio, riding evidence from the fused-step token
+    counters, and wall-clock tok/s.  Writes BENCH_mixed.json."""
+    import copy
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.configs import REGISTRY, reduced
+    from repro.engine.request import Request
+    from repro.engine.server import LoongServeEngine
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    from repro.manager.scheduler import ManagerConfig
+    from repro.models import build_model
+
+    cfg = reduced(REGISTRY["lwm-7b"])
+    n_inst = 2
+    b = 8
+    # short_new sized so the 8 stall-affected TBT samples (one per short,
+    # the diff spanning the baseline's monolithic long prefill) sit fully
+    # above the p99 index of the 8*(short_new-1) samples — p99 must measure
+    # the stall, not interpolate across its boundary
+    short_len, short_new = (16, 48) if quick else (32, 64)
+    long_len, chunk = (1280, 64) if quick else (2048, 256)
+    long_new = 4
+    # capacity: sized so the long prompt IS admitted while the shorts are
+    # still mid-decode (fleet-wide free >= its footprint + growth reserve)
+    # but does NOT fit on one instance, so its placement (and the
+    # baseline's monolithic prefill) spans both — stripping the shorts'
+    # decode group — the contended scenario the unified step targets
+    capacity = 912 if quick else 1600
+    rng = np.random.default_rng(0)
+    reqs = []
+    for _ in range(b):
+        reqs.append(Request(
+            input_len=short_len, max_new_tokens=short_new, arrival=0.0,
+            prompt=rng.integers(0, cfg.vocab_size, short_len).tolist(),
+        ))
+    long_req = Request(
+        input_len=long_len, max_new_tokens=long_new, arrival=0.05,
+        prompt=rng.integers(0, cfg.vocab_size, long_len).tolist(),
+    )
+    reqs.append(long_req)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    oracle = {
+        i: kref.serial_decode_oracle(model, params, r.prompt,
+                                     r.max_new_tokens - 1)
+        for i, r in enumerate(reqs)
+    }
+
+    def seed_profile(sib):
+        # serving-scale iteration-time profile (the paper's SQLite profile
+        # store, condensed to a fitted plane): per-token prefill cost
+        # dominates the launch overhead, so a monolithic long prefill
+        # occupies its instances for time proportional to prompt length.
+        # DoP=2 gets a mild efficiency edge so DP batching keeps the
+        # same-instant burst in one spanning batch (one decode group).
+        # Identical profile for both arms; decode keeps the napkin model.
+        for dop in (1, 2):
+            beta = 25e-6 / dop * (0.96 if dop == 2 else 1.0)
+            for lens in ([64], [256], [1024], [2048], [512, 512]):
+                s1 = sum(lens)
+                s2 = sum(l * l for l in lens)
+                sib.record_prefill(dop, lens, 0.003 + beta * s1 + 1e-11 * s2)
+        # the memory-bound tipping point is profilable too (§5.1); the
+        # napkin default reflects the reduced toy model, not this profile —
+        # pin it so a burst of B shorts still forms one prefill batch
+        sib.prefill_tipping_point = lambda dop: 0.012
+
+    def run_arm(chunk_tokens):
+        eng = LoongServeEngine(
+            cfg, n_inst, capacity, store_values=True, model=model,
+            params=params, page_size=16,
+            mcfg=ManagerConfig(prefill_chunk_tokens=chunk_tokens),
+        )
+        seed_profile(eng.sib)
+        rs = copy.deepcopy(reqs)
+        shorts = rs[:b]
+        # engine-clock emission timestamps of every short-request token
+        emitted = {id(r): [0] * 0 for r in shorts}
+        seen = {id(r): 0 for r in shorts}
+
+        def watch(e, kind, payload):
+            for r in shorts:
+                if r.generated > seen[id(r)]:
+                    emitted[id(r)].extend(
+                        [e.clock] * (r.generated - seen[id(r)])
+                    )
+                    seen[id(r)] = r.generated
+
+        ops.reset_dispatch_counts()
+        for r in rs:
+            eng.submit(r)
+        eng.event_hooks.append(watch)
+        t0 = time.perf_counter()
+        m = eng.run()
+        wall = time.perf_counter() - t0
+        assert len(m.finished) == len(rs), (chunk_tokens, len(m.finished))
+        for i, r in enumerate(rs):
+            assert r.output_tokens == oracle[i], (chunk_tokens, i)
+        tbt = np.concatenate([
+            np.diff(np.asarray(ts)) for ts in emitted.values() if len(ts) > 1
+        ])
+        total_tok = sum(r.generated for r in rs)
+        return {
+            "decode_tbt_p50": float(np.percentile(tbt, 50)),
+            "decode_tbt_p99": float(np.percentile(tbt, 99)),
+            "decode_tbt_max": float(tbt.max()),
+            "wall_tok_s": float(total_tok / wall),
+            "unified_steps": int(ops.dispatch_counts["unified_step"]),
+            "unified_decode_tokens": int(
+                ops.dispatch_counts["unified_decode_tokens"]
+            ),
+        }
+
+    seq = run_arm(None)
+    uni = run_arm(chunk)
+    ratio = seq["decode_tbt_p99"] / max(uni["decode_tbt_p99"], 1e-12)
+    out = {
+        "batch": b,
+        "n_instances": n_inst,
+        "short_len": short_len,
+        "short_new_tokens": short_new,
+        "long_len": long_len,
+        "prefill_chunk_tokens": chunk,
+        "kernel_impl": ops.get_default_impl(),
+        "sequential": seq,
+        "unified": uni,
+        "tbt_p99_ratio": ratio,
+    }
+    path = "BENCH_mixed_quick.json" if quick else "BENCH_mixed.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row(
+        "mixed_unified_vs_sequential",
+        uni["decode_tbt_p99"] * 1e6,
+        f"tbt_p99_ratio:{ratio:.2f}x;"
+        f"riders:{uni['unified_decode_tokens']};"
+        f"steps:{uni['unified_steps']}",
+    )
+
+
 # ------------------------------------------------- SPMD mesh-executor ring
 
 
@@ -797,6 +953,7 @@ BENCHES = {
     "decode": bench_decode_paged,
     "prefill": bench_prefill_packed,
     "prefill_ring": bench_prefill_ring,
+    "mixed": bench_mixed,
     "prefill_spmd": bench_prefill_spmd,
     "decode_spmd": bench_decode_spmd,
     "roofline": bench_roofline_summary,
@@ -804,7 +961,8 @@ BENCHES = {
 
 # CI smoke: the engine hot paths (quick mode, *_quick.json artifacts);
 # failures are fatal so the benchmark paths can't silently rot.
-SMOKE = ("decode", "prefill", "prefill_ring", "prefill_spmd", "decode_spmd")
+SMOKE = ("decode", "prefill", "prefill_ring", "mixed", "prefill_spmd",
+         "decode_spmd")
 
 
 def _bench_headline(data: dict) -> dict:

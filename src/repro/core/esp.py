@@ -122,12 +122,76 @@ def ring_packed_prefill(
     return striped.unstripe(jnp.concatenate(outs, axis=0), n, axis=0)
 
 
+def switched_ring_chunk(
+    sp: str, n: int, step: int, q, k, v, seq_offsets, carry, *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    max_seq_len: Optional[int] = None,
+    impl: Optional[str] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    """One ring-chunk fold inside a shard_map body, dispatching the
+    CONFIGURED kernel impl instead of forcing the banded XLA fallback.
+
+    The shard ids of ring step ``step`` are rank-derived (`lax.axis_index`),
+    so — exactly like `_switched_paged_partial` on the decode side — non-XLA
+    impls go through `lax.switch` over ``n`` statically-specialized branches:
+    branch ``r`` bakes ``q_shard=r, k_shard=(r-step) % n`` (``step`` is a
+    python loop constant) as the compile-time constants the Pallas kernel's
+    tile-skip predicates need.  The XLA banded fallback accepts traced shard
+    ids and dispatches directly.  ``seq_offsets`` are the GLOBAL packed
+    offsets; per-shard offsets derive in place (`striped.shard_offsets`)."""
+    from repro.kernels import ops
+
+    eff = impl or ops.get_default_impl()
+    if eff == "xla":
+        r = lax.axis_index(sp)
+        k_shard = (r - step) % n
+        return ops.prefill_ring_chunk(
+            q, k, v,
+            striped.shard_offsets(seq_offsets, n, r),
+            striped.shard_offsets(seq_offsets, n, k_shard),
+            carry, q_shard=r, k_shard=k_shard, n_shards=n, window=window,
+            softcap=softcap, max_seq_len=max_seq_len, impl="xla",
+            block_q=block_q, block_k=block_k,
+        )
+    if carry is None:
+        tl, h, d = q.shape
+        carry = (
+            jnp.zeros((tl, h, d), jnp.float32),
+            jnp.full((tl, h), -jnp.inf, jnp.float32),
+            jnp.zeros((tl, h), jnp.float32),
+        )
+
+    def branch(rank: int):
+        k_shard = (rank - step) % n
+
+        def run(operands):
+            qb, kb, vb, cb = operands
+            return ops.prefill_ring_chunk(
+                qb, kb, vb,
+                striped.shard_offsets(seq_offsets, n, rank),
+                striped.shard_offsets(seq_offsets, n, k_shard),
+                cb, q_shard=rank, k_shard=k_shard, n_shards=n, window=window,
+                softcap=softcap, max_seq_len=max_seq_len, impl=eff,
+                block_q=block_q, block_k=block_k,
+            )
+
+        return run
+
+    return lax.switch(
+        lax.axis_index(sp), [branch(r) for r in range(n)], (q, k, v, carry)
+    )
+
+
 def ring_packed_prefill_spmd(
     mesh: Mesh, q, k, v, seq_offsets, *,
     sp_axis: str = "data",
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     max_seq_len: Optional[int] = None,
+    impl: Optional[str] = None,
     block_q: int = 128,
     block_k: int = 128,
     double_buffer: bool = True,
@@ -156,9 +220,11 @@ def ring_packed_prefill_spmd(
     mis-reshards tiny computed arrays entering a manual region on a
     multi-axis mesh, and the ring leg then only needs to move KV bytes.
 
-    Shard ids reach the chunk kernel as traced values (`lax.axis_index`), so
-    the body always uses the banded XLA chunk fallback — the portable SPMD
-    path; specializing the Pallas kernel per rank on TPU is a ROADMAP item.
+    Shard ids reach the chunk kernel rank-derived, so the real (Pallas)
+    kernel dispatches through `switched_ring_chunk`'s statically-specialized
+    `lax.switch` branches — the same trick the decode path uses
+    (`_switched_paged_partial`); the XLA banded fallback keeps its direct
+    traced-shard-id dispatch.
 
     q [T,H,D], k/v [T,KVH,D] in PACKED order (T % n == 0); returns the
     normalized [T,H,D] f32 output, numerically equal to
@@ -171,7 +237,7 @@ def ring_packed_prefill_spmd(
     if n == 1:
         return ops.prefill_packed(
             q, k, v, seq_offsets, window=window, softcap=softcap,
-            max_seq_len=max_seq_len, impl="xla", block_q=block_q,
+            max_seq_len=max_seq_len, impl=impl, block_q=block_q,
             block_k=block_k,
         )
     ops.dispatch_counts["prefill_ring_spmd"] += 1
@@ -180,24 +246,18 @@ def ring_packed_prefill_spmd(
 
     def body(qb, kb, vb, ob):
         # qb/kb/vb: [Tl, ...] this rank's stripe; ob: [B+1] global offsets
-        r = lax.axis_index(sp)
-        q_off = striped.shard_offsets(ob, n, r)
         kk, vv = kb, vb
         carry = None
         for step in range(n):
-            # held chunk's shard id: step-th rotation of the ring
-            k_shard = (r - step) % n
-            k_off = striped.shard_offsets(ob, n, k_shard)
             if step < n - 1 and double_buffer:
                 # issue the NEXT stripe's transfer before folding this one:
                 # no data dependency on the fold, so XLA/ICI can overlap the
                 # ppermute with the chunk compute
                 nxt = ops.ring_ppermute((kk, vv), sp, pairs)
-            carry = ops.prefill_ring_chunk(
-                qb, kk, vv, q_off, k_off, carry,
-                q_shard=r, k_shard=k_shard, n_shards=n, window=window,
-                softcap=softcap, max_seq_len=max_seq_len, impl="xla",
-                block_q=block_q, block_k=block_k,
+            carry = switched_ring_chunk(
+                sp, n, step, qb, kk, vv, ob, carry,
+                window=window, softcap=softcap, max_seq_len=max_seq_len,
+                impl=impl, block_q=block_q, block_k=block_k,
             )
             if step < n - 1:
                 if double_buffer:
@@ -488,6 +548,103 @@ def paged_decode_iteration_spmd(
     specs = [P(), P(sp), P(None), P(sp), P(sp), P(sp), P(sp), P(sp)]
     args = [params, toks, n_cached_full, k_pages, v_pages, table, lengths,
             route]
+    if has_pos:
+        specs.append(P(sp))
+        args.append(page_pos)
+    fn = _shmap(
+        body, mesh, in_specs=tuple(specs),
+        out_specs=(P(None), P(None, sp), P(None, sp)),
+    )
+    return fn(*args)
+
+
+def unified_iteration_spmd(
+    mesh: Mesh, model, impl, params, toks, positions, seq_offsets, last_idx,
+    k_pages, v_pages, table, lengths, page_pos, *,
+    sp_axis: str = "data",
+    max_seq_len: Optional[int] = None,
+    double_buffer: bool = True,
+):
+    """ONE shard_map program for a whole UNIFIED engine iteration: a bounded
+    chunk of every admitted prompt's prefill tokens AND all in-flight decode
+    tokens packed on a single ragged token axis, STRIPED over the group's
+    data ranks.
+
+    Each rank runs the full stack (embed, QKV, FFN, norms) on its token
+    stripe; at every layer boundary the armed `core.unified.UnifiedAttnImpl`
+    executes BOTH compute planes inside the same layer:
+
+      * prefix plane (the decode-path schedule): all_gather(q stripes) ->
+        per-rank paged partial over its OWN pool plane with per-token tables
+        and filled-prefix lengths (`_switched_paged_partial`) -> pmax +
+        psum_scatter LSE-merge addressed back to the stripes;
+      * chunk plane (the prefill-path schedule): the striped `lax.ppermute`
+        KV ring folded into the prefix carry (`switched_ring_chunk`, real
+        kernel under `lax.switch`), double-buffered.
+
+    A decode row is a length-1 segment whose prefix is its whole cache —
+    the merge is bit-identical to `paged_decode_iteration_spmd`'s; a prefill
+    chunk's prefix is the part of its prompt already written through
+    `fill_packed`, so the pool IS the carried (acc, m, l) flash state across
+    engine iterations.
+
+    In-program epilogue: the final hidden stripes are all_gathered, each
+    SEGMENT's last token row is unembedded and greedily argmaxed (bit-equal
+    to the engine's host `_sample_token`), and the packed per-layer KV comes
+    back token-sharded for write-through scatter.  Like the decode routed
+    path, the SPMD program has no host NaN guard — chaos NaN injection is a
+    LocalExecutor concern (documented degradation gap).
+
+    toks [T] int32 STRIPED order, sharded over ``sp_axis`` (T % n == 0);
+    positions [T] int32 replicated, striped order (prefix query_pos; ranks
+    slice their own stripe for RoPE); seq_offsets [S+1] replicated GLOBAL
+    packed offsets; last_idx [S] replicated striped-coordinate indices of
+    each segment's sampling row (bucket-pad rows point at 0, never read);
+    k_pages/v_pages [n, L, n_pages, P, KVH, D], table [n, T, max_pages],
+    lengths [n, T], page_pos [n, n_pages, P] (window only) — leading axis =
+    rank.  Returns (ids [S] replicated, k_packed, v_packed [L, T, KVH, D]
+    sharded on the striped token axis)."""
+    from repro.core.unified import UnifiedShard
+    from repro.kernels import ops
+
+    n = int(mesh.shape[sp_axis])
+    t = int(toks.shape[0])
+    assert t % n == 0 and int(k_pages.shape[0]) == n, (t, k_pages.shape, n)
+    t_l = t // n
+    ops.dispatch_counts["unified_iteration_spmd"] += 1
+    sp = sp_axis
+    has_pos = page_pos is not None
+
+    def body(prm, tk, posf, ob, li_, kb, vb, tb, lb, *pb):
+        # tk: this rank's token stripe [T/n]; kb/vb/tb/lb/pb: its pool plane
+        # + per-token paged operands over the FULL striped axis (leading
+        # shard dim 1); posf/ob/li_: replicated
+        r = lax.axis_index(sp)
+        posl = lax.dynamic_slice_in_dim(posf, r * t_l, t_l, axis=0)
+        shard = UnifiedShard(
+            kb[0], vb[0], pb[0][0] if has_pos else None, tb[0], lb[0]
+        )
+        impl.begin_step(
+            ob, posf, max_seq_len=max_seq_len, shards=[shard], axis_name=sp,
+            n_ranks=n, double_buffer=double_buffer,
+        )
+        try:
+            x, kv = model.prefill_packed_hidden(
+                prm, {"tokens": tk[None]}, posl, unroll=True
+            )
+        finally:
+            impl.end_step()
+        xg = ops.all_gather(x[0], sp, axis=0)  # [T, d]
+        sel = jnp.take(xg, li_, axis=0)
+        logits = model.unembed(prm, sel[None])[0]  # [S, V]
+        ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return ids, kv[0], kv[1]
+
+    specs = [P(), P(sp), P(None), P(None), P(None), P(sp), P(sp), P(sp),
+             P(sp)]
+    args = [params, toks, positions, jnp.asarray(seq_offsets, jnp.int32),
+            jnp.asarray(last_idx, jnp.int32), k_pages, v_pages, table,
+            lengths]
     if has_pos:
         specs.append(P(sp))
         args.append(page_pos)

@@ -86,7 +86,7 @@ class PackedPrefillAttnImpl(DefaultAttnImpl):
             out = ring_packed_prefill_spmd(
                 self._mesh, q[0], k[0], v[0], self._offsets, window=window,
                 softcap=softcap, max_seq_len=self._max_seq_len,
-                double_buffer=self._double_buffer,
+                impl=self._impl, double_buffer=self._double_buffer,
             )
         elif self._dop > 1:
             from repro.core.esp import ring_packed_prefill

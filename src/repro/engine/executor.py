@@ -32,9 +32,21 @@ path (tests/test_ring_prefill.py, tests/mesh_exec_cases.py).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from collections import OrderedDict
+from typing import Any, Dict, List, NamedTuple, Tuple
 
 import numpy as np
+
+
+class _USeg(NamedTuple):
+    """One segment of a unified iteration's packed token axis."""
+
+    r: Any  # the Request
+    decode: bool  # decode row (ln == 1) vs prefill chunk
+    start: int  # first global position this iteration
+    ln: int  # token count this iteration
+    limit: int  # filled-prefix length: positions < limit are in the pool
+    final: bool  # sample a token from this segment's last row
 
 
 class LocalExecutor:
@@ -56,15 +68,49 @@ class LocalExecutor:
         # across the group and attention ring-fused — no serial fallback for
         # scaled-up groups.  Same family gating as the paged decode path.
         self._packed_prefill_impl = None
-        self._prefill_programs: Dict[Tuple, Any] = {}
+        self._unified_impl = None
+        # ONE iteration-program cache for every compiled variant the
+        # executor dispatches — prefill, decode and unified steps share it,
+        # keyed by (kind, bucket tuple..., mesh) with LRU eviction so a
+        # long-lived engine cycling many bucket/mesh shapes cannot grow the
+        # compiled-program set without bound.
+        self._programs: "OrderedDict[Tuple, Any]" = OrderedDict()
         if engine.cfg.family in ("dense", "vlm"):
             from repro.core.paged_decode import PagedDecodeAttnImpl
             from repro.core.paged_prefill import PackedPrefillAttnImpl
+            from repro.core.unified import UnifiedAttnImpl
             from repro.models.transformer import DefaultAttnImpl
 
             if type(getattr(engine.model, "attn_impl", None)) is DefaultAttnImpl:
                 self._paged_impl = PagedDecodeAttnImpl()
                 self._packed_prefill_impl = PackedPrefillAttnImpl()
+                self._unified_impl = UnifiedAttnImpl()
+
+    # --------------------------------------------------- program LRU cache
+    _program_cache_cap = 64
+
+    def _program_get(self, key):
+        fn = self._programs.get(key)
+        if fn is not None:
+            self._programs.move_to_end(key)
+        return fn
+
+    def _program_put(self, key, fn):
+        self._programs[key] = fn
+        self._programs.move_to_end(key)
+        while len(self._programs) > self._program_cache_cap:
+            self._programs.popitem(last=False)
+        return fn
+
+    @property
+    def _prefill_programs(self) -> Dict[Tuple, Any]:
+        """Cached packed-prefill programs, keyed without the kind prefix
+        (compat view over the merged cache for tests/benchmarks)."""
+        return {k[1:]: v for k, v in self._programs.items() if k[0] == "prefill"}
+
+    @property
+    def _decode_programs(self) -> Dict[Tuple, Any]:
+        return {k[1:]: v for k, v in self._programs.items() if k[0] == "decode"}
 
     # ------------------------------------------------------------ NaN guard
     def _guard_logits(self, r, row):
@@ -148,8 +194,8 @@ class LocalExecutor:
         """Jitted packed prefill program for one bucket tuple; cached so
         the compile count stays O(log max_tokens) per DoP (the mesh executor
         additionally keys by mesh shape)."""
-        key = self._program_key(tb, bb, max_len_b, dop)
-        fn = self._prefill_programs.get(key)
+        key = ("prefill",) + self._program_key(tb, bb, max_len_b, dop)
+        fn = self._program_get(key)
         if fn is None:
             import jax
 
@@ -165,7 +211,7 @@ class LocalExecutor:
                 finally:
                     impl.end_step()
 
-            fn = self._prefill_programs[key] = jax.jit(step)
+            fn = self._program_put(key, jax.jit(step))
         return fn
 
     def prefill_packed(self, batch) -> None:
@@ -383,6 +429,250 @@ class LocalExecutor:
                     np.asarray(kvs[1][:, 0], np.float32),
                 )
 
+    # ------------------------------------------------------------- unified
+    @property
+    def supports_unified(self) -> bool:
+        """The fused chunked-prefill+decode iteration needs the packed attn
+        impls (dense/vlm family) and real paged KV storage for the prefix
+        partials to read from."""
+        return (
+            self._unified_impl is not None
+            and self.eng.pool.pools[0].store_values
+        )
+
+    def _unified_segments(self, work) -> List[_USeg]:
+        """Packed-axis layout of one unified iteration: every admitted
+        prompt's prefill chunk (batch order), then one decode row per
+        in-flight request.  A prefill segment's filled prefix is everything
+        before its chunk cursor; a decode row's is its whole cache (tokens
+        0..seq_len-2 — the processed token's KV is produced by this step)."""
+        segs: List[_USeg] = []
+        for r in work.batch.requests:
+            if r.rid not in work.chunks:
+                continue  # out of chunk budget this iteration
+            start, ln = work.chunks[r.rid]
+            assert ln > 0 and start + ln <= r.input_len, (start, ln, r.input_len)
+            segs.append(
+                _USeg(r, False, start, ln, start, start + ln == r.input_len)
+            )
+        for g in work.groups:
+            for r in g.requests:
+                segs.append(_USeg(r, True, r.seq_len - 1, 1, r.seq_len - 1, True))
+        return segs
+
+    def _unified_pack(self, segs, tb: int = None):
+        """Host-side packing: (tokens [tb], positions [tb], offsets [bb+1],
+        last_idx [bb]) — exactly `prefill_packed`'s layout, with decode rows
+        as length-1 segments carrying their request's last sampled token.
+        ``tb`` overrides the token bucket (the SPMD path needs a multiple of
+        the rank count)."""
+        total = sum(s.ln for s in segs)
+        if tb is None:
+            tb = self._token_bucket(total)
+        bb = self._bucket(len(segs), lo=1)
+        tokens = np.zeros(tb, np.int32)
+        positions = np.zeros(tb, np.int32)
+        offsets = np.full(bb + 1, total, np.int32)
+        offsets[0] = 0
+        last_idx = np.zeros(bb, np.int32)
+        c = 0
+        for b, s in enumerate(segs):
+            if s.decode:
+                tokens[c] = s.r.output_tokens[-1]
+            else:
+                tokens[c : c + s.ln] = np.asarray(
+                    s.r.prompt[s.start : s.start + s.ln], np.int32
+                )
+            positions[c : c + s.ln] = np.arange(s.start, s.start + s.ln)
+            c += s.ln
+            offsets[b + 1] = c
+            last_idx[b] = c - 1
+        return tokens, positions, offsets, last_idx
+
+    def _unified_count(self, segs) -> None:
+        from repro.kernels import ops
+
+        n_pre = sum(s.ln for s in segs if not s.decode)
+        ops.dispatch_counts["unified_step"] += 1
+        ops.dispatch_counts["unified_prefill_tokens"] += n_pre
+        ops.dispatch_counts["unified_decode_tokens"] += sum(
+            s.ln for s in segs if s.decode
+        )
+
+    def _unified_shards(self, segs, tb: int):
+        """Per-pool `core.unified.UnifiedShard`s with PER-TOKEN paged prefix
+        operands: one `prefix_block_table` row per segment (clipped to the
+        filled prefix), expanded to the packed token axis.  Returns
+        (shards, covered); covered[b] sums segment b's prefix length over
+        every pool and must equal its limit — no filled slot unreachable,
+        none double-counted."""
+        from repro.core.unified import UnifiedShard
+
+        eng = self.eng
+        rids = [s.r.rid for s in segs]
+        limits = np.array([s.limit for s in segs], np.int64)
+        infos = []
+        for pool in eng.pool.pools:
+            if pool.instance_id in eng.failed:
+                continue
+            table, lengths = pool.prefix_block_table(rids, limits)
+            if lengths.any():
+                infos.append((pool, table, lengths))
+        covered = (
+            np.sum([lg for _, _, lg in infos], axis=0)
+            if infos
+            else np.zeros(len(segs), np.int64)
+        )
+        mpb = self._bucket(
+            max((t.shape[1] for _, t, _ in infos), default=1), lo=1
+        )
+        shards = []
+        for pool, table, lengths in infos:
+            tbl_t = np.zeros((tb, mpb), np.int32)
+            len_t = np.zeros(tb, np.int32)
+            c = 0
+            for b, s in enumerate(segs):
+                tbl_t[c : c + s.ln, : table.shape[1]] = table[b]
+                len_t[c : c + s.ln] = lengths[b]
+                c += s.ln
+            kdev, vdev, posdev = pool.device_paged_kv()
+            shards.append(UnifiedShard(
+                k_pages=kdev,
+                v_pages=vdev,
+                page_pos=(posdev if eng.cfg.sliding_window else None),
+                table=pool._dev_put(tbl_t),
+                lengths=pool._dev_put(len_t),
+            ))
+        return shards, covered
+
+    def _unified_step(self, tb: int, bb: int, max_len_b: int, n_shards: int):
+        """Jitted in-process unified program for one bucket tuple: one
+        packed model step with `UnifiedAttnImpl` merging the paged prefix
+        partials into the chunk attention at every layer (static python
+        layer loop — `unroll=True` — so the impl can keep a layer cursor)."""
+        key = ("unified", tb, bb, max_len_b, n_shards)
+        fn = self._program_get(key)
+        if fn is None:
+            import jax
+
+            model, impl = self.eng.model, self._unified_impl
+
+            def step(params, tokens, positions, offsets, last_idx, shards):
+                impl.begin_step(
+                    offsets, positions, max_seq_len=max_len_b, shards=shards
+                )
+                try:
+                    return model.prefill_packed(
+                        params, {"tokens": tokens[None]}, positions, last_idx,
+                        unroll=True,
+                    )
+                finally:
+                    impl.end_step()
+
+            fn = self._program_put(key, jax.jit(step))
+        return fn
+
+    def unified(self, work) -> None:
+        """ONE packed model step for a whole unified iteration: a bounded
+        chunk of each admitted prompt's prefill tokens AND every in-flight
+        decode token share one ragged token axis; per layer the chunk
+        attention folds on top of the paged prefix partials
+        (`core.unified`).  First/next tokens are sampled from the packed
+        logits, prefill chunk KV write-throughs at the reserved slots, and
+        decode KV is stashed exactly like `decode_paged`."""
+        segs = self._unified_segments(work)
+        self._unified_local(work, segs)
+
+    def _unified_local(self, work, segs) -> None:
+        import jax.numpy as jnp
+
+        eng = self.eng
+        tokens, positions, offsets, last_idx = self._unified_pack(segs)
+        tb, bb = len(tokens), len(last_idx)
+        max_len_b = self._bucket(max(s.ln for s in segs))
+        shards, covered = self._unified_shards(segs, tb)
+        limits = np.array([s.limit for s in segs], np.int64)
+        assert (covered == limits).all(), (covered, limits)
+        self._unified_count(segs)
+        fn = self._unified_step(tb, bb, max_len_b, len(shards))
+        prev_impl = eng.model.attn_impl
+        eng.model.attn_impl = self._unified_impl
+        try:
+            logits, (k_packed, v_packed) = fn(
+                eng.params, jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(offsets), jnp.asarray(last_idx), tuple(shards),
+            )
+        finally:
+            eng.model.attn_impl = prev_impl
+        self._unified_emit(
+            work, segs, np.asarray(logits), None, k_packed, v_packed, None
+        )
+
+    def _unified_emit(
+        self, work, segs, logits, ids, k_packed, v_packed, colmap
+    ) -> None:
+        """Shared unified epilogue.  Host-sampling path: ``logits`` [>=S, V]
+        rows pass the NaN guard then argmax (``ids`` None); SPMD path:
+        ``ids`` [>=S] were sampled in-program (logits never leave the
+        program, so no value guard — same documented gap as
+        `_emit_decoded_routed`).  ``colmap`` maps a packed column to its row
+        on the KV output's token axis (striped order under SPMD; None =
+        identity).  Prefill chunk KV scatters write-through at the chunk's
+        reserved placement slots; decode KV is stashed for
+        `_on_unified_done` to fill once the slot is allocated."""
+        import jax.numpy as jnp
+
+        eng = self.eng
+        starts = np.concatenate([[0], np.cumsum([s.ln for s in segs])])
+        col_of = (lambda c: c) if colmap is None else (lambda c: colmap[c])
+        emitted = set()
+        for b, s in enumerate(segs):
+            if not s.final:
+                continue
+            if ids is None:
+                row = self._guard_logits(s.r, logits[b])
+                if row is None:
+                    continue  # quarantined: no token, engine requeues
+                s.r.output_tokens.append(eng._sample_token(row))
+            else:
+                s.r.output_tokens.append(int(ids[b]))
+            emitted.add(s.r.rid)
+        if not eng.pool.pools[0].store_values:
+            return
+        per_inst: Dict[int, Tuple[List[np.ndarray], List[np.ndarray]]] = {}
+        dec_cols: List[int] = []
+        dec_reqs: List[Any] = []
+        for b, s in enumerate(segs):
+            if s.decode:
+                if s.r.rid in emitted:  # quarantined rows stash no KV
+                    dec_cols.append(int(col_of(starts[b])))
+                    dec_reqs.append(s.r)
+                continue
+            lo, hi = s.start, s.start + s.ln
+            for inst, pos_list in work.batch.placement.get(s.r.rid, {}).items():
+                if not pos_list or inst in eng.failed:
+                    continue
+                p = np.asarray(pos_list, np.int64)
+                p = p[(p >= lo) & (p < hi)]
+                if not len(p):
+                    continue
+                cols, slots = per_inst.setdefault(inst, ([], []))
+                cols.append(np.asarray(col_of(starts[b] + (p - lo)), np.int64))
+                slots.append(eng.pool.pools[inst].slots_for(s.r.rid, p))
+        for inst, (cols, slots) in per_inst.items():
+            cidx = jnp.asarray(np.concatenate(cols))
+            eng.pool.pools[inst].fill_packed(
+                np.concatenate(slots),
+                jnp.take(k_packed, cidx, axis=1),
+                jnp.take(v_packed, cidx, axis=1),
+            )
+        if dec_cols:
+            dc = jnp.asarray(np.asarray(dec_cols, np.int64))
+            kd = np.asarray(jnp.take(k_packed, dc, axis=1), np.float32)
+            vd = np.asarray(jnp.take(v_packed, dc, axis=1), np.float32)
+            for j, r in enumerate(dec_reqs):
+                eng._pending_kv[r.rid] = (kd[:, j : j + 1], vd[:, j : j + 1])
+
 
 class MeshExecutor(LocalExecutor):
     """SPMD executor: DoP>1 packed ring prefill as a real shard_map program.
@@ -452,7 +742,6 @@ class MeshExecutor(LocalExecutor):
         self.batch_shard = batch_shard
         self._group_meshes: Dict[Tuple[int, ...], Any] = {}
         self._decode_meshes: Dict[Tuple[int, ...], Any] = {}
-        self._decode_programs: Dict[Tuple, Any] = {}
         self._params_rep: Dict[Any, Any] = {}
         self._bind_pool_devices()
 
@@ -563,8 +852,8 @@ class MeshExecutor(LocalExecutor):
         pmax+psum merge); ``rb`` set compiles the batch-sharded iteration
         (`core.esp.paged_decode_iteration_spmd`) with R=rb routed KV-append
         rows per master."""
-        key = (bb, mpb, mesh, self.decode_overlap, rb)
-        fn = self._decode_programs.get(key)
+        key = ("decode", bb, mpb, mesh, self.decode_overlap, rb)
+        fn = self._program_get(key)
         if fn is None:
             import jax
 
@@ -597,7 +886,7 @@ class MeshExecutor(LocalExecutor):
                         impl.end_step()
                     return logits, kvs
 
-            fn = self._decode_programs[key] = jax.jit(step)
+            fn = self._program_put(key, jax.jit(step))
         return fn
 
     def _decode_spmd_setup(self, g):
@@ -745,3 +1034,137 @@ class MeshExecutor(LocalExecutor):
             r.output_tokens.append(int(toks[b]))
             row = rowmap[r.rid]
             eng._pending_kv[r.rid] = (k_rt[:, row], v_rt[:, row])
+
+    # unified: the whole fused iteration as ONE shard_map program ---------
+    def _unified_spmd_program(self, tb, bb, max_len_b, mesh):
+        """Jitted SPMD unified program for one (bucket tuple, mesh) —
+        cached in the same merged LRU iteration cache as the prefill and
+        decode programs."""
+        key = ("unified_spmd", tb, bb, max_len_b, mesh)
+        fn = self._program_get(key)
+        if fn is None:
+            import jax
+
+            from repro.core.esp import unified_iteration_spmd
+
+            model, impl = self.eng.model, self._unified_impl
+            dbuf = self.double_buffer
+
+            def step(params, toks, positions, offsets, last_idx, k_g, v_g,
+                     tbl_g, len_g, pos_g):
+                return unified_iteration_spmd(
+                    mesh, model, impl, params, toks, positions, offsets,
+                    last_idx, k_g, v_g, tbl_g, len_g, pos_g,
+                    max_seq_len=max_len_b, double_buffer=dbuf,
+                )
+
+            fn = self._program_put(key, jax.jit(step))
+        return fn
+
+    def _unified_spmd_setup(self, work, segs):
+        """Assemble the SPMD unified call: returns (fn, args, inv) or None
+        when the iteration cannot run SPMD (fewer than two KV-holding
+        instances with distinct mirror devices).  ``inv`` maps a packed
+        column to its striped row on the program's token axis.
+
+        Exactly `_decode_spmd_setup`'s zero-copy shape: each pool's
+        `device_paged_kv` view becomes data-rank i's slice of one
+        mesh-sharded array; the executor ships per-TOKEN prefix block-table
+        rows (tiny, striped order) and ZERO KV bytes."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.core import striped
+
+        eng = self.eng
+        rids = [s.r.rid for s in segs]
+        limits = np.array([s.limit for s in segs], np.int64)
+        infos = []
+        for pool in eng.pool.pools:
+            if pool.instance_id in eng.failed:
+                continue
+            table, lengths = pool.prefix_block_table(rids, limits)
+            if lengths.any():
+                infos.append((pool, table, lengths))
+        if len(infos) < 2:
+            return None
+        mesh = self._decode_mesh(tuple(p.instance_id for p, _, _ in infos))
+        if mesh is None:
+            return None
+        covered = np.sum([lg for _, _, lg in infos], axis=0)
+        assert (covered == limits).all(), (covered, limits)
+        n = len(infos)
+        total = sum(s.ln for s in segs)
+        tb = self._token_bucket(-(-total // n)) * n
+        tokens, positions, offsets, last_idx = self._unified_pack(segs, tb)
+        bb = len(last_idx)
+        max_len_b = self._bucket(max(s.ln for s in segs))
+        # striped layout: packed col c lives at striped row inv[c] (rank
+        # c % n); block-sharding a pre-striped array hands every rank
+        # exactly its stripe
+        perm = striped.stripe_indices(tb, n)
+        inv = striped.unstripe_indices(tb, n)
+        mpb = self._bucket(max(t.shape[1] for _, t, _ in infos), lo=1)
+        sh = NamedSharding(mesh, P("data"))
+        kds, vds, pds = [], [], []
+        tbl = np.zeros((n, tb, mpb), np.int32)
+        lens = np.zeros((n, tb), np.int32)
+        for i, (pool, table, lengths) in enumerate(infos):
+            kd, vd, pd = pool.device_paged_kv()
+            kds.append(kd[None])
+            vds.append(vd[None])
+            pds.append(pd[None])
+            len_t = np.zeros(tb, np.int32)
+            tbl_t = np.zeros((tb, table.shape[1]), np.int32)
+            c = 0
+            for b, s in enumerate(segs):
+                tbl_t[c : c + s.ln] = table[b]
+                len_t[c : c + s.ln] = lengths[b]
+                c += s.ln
+            tbl[i, :, : table.shape[1]] = tbl_t[perm]
+            lens[i] = len_t[perm]
+        assemble = jax.make_array_from_single_device_arrays
+        k_g = assemble((n,) + kds[0].shape[1:], sh, kds)
+        v_g = assemble((n,) + vds[0].shape[1:], sh, vds)
+        pos_g = (
+            assemble((n,) + pds[0].shape[1:], sh, pds)
+            if eng.cfg.sliding_window else None
+        )
+        fn = self._unified_spmd_program(tb, bb, max_len_b, mesh)
+        args = (
+            self._replicated_params(mesh),
+            jax.device_put(tokens[perm], sh),
+            jnp.asarray(positions[perm]),
+            jnp.asarray(offsets),
+            jnp.asarray(inv[last_idx].astype(np.int32)),
+            k_g, v_g, jax.device_put(tbl, sh), jax.device_put(lens, sh),
+            pos_g,
+        )
+        return fn, args, inv
+
+    def unified(self, work) -> None:
+        """The whole unified iteration as ONE shard_map program
+        (`core.esp.unified_iteration_spmd`): per layer, the decode-style
+        paged prefix merge and the prefill-style ppermute chunk ring run
+        back to back on the striped token axis, and tokens are sampled
+        in-program.  Falls back to the in-process fused loop when the group
+        cannot run SPMD."""
+        segs = self._unified_segments(work)
+        setup = (
+            self._unified_spmd_setup(work, segs) if self.spmd_decode else None
+        )
+        if setup is None:
+            return self._unified_local(work, segs)
+        fn, args, inv = setup
+        self._unified_count(segs)
+        eng = self.eng
+        prev_impl = eng.model.attn_impl
+        eng.model.attn_impl = self._unified_impl
+        try:
+            ids, k_packed, v_packed = fn(*args)
+        finally:
+            eng.model.attn_impl = prev_impl
+        self._unified_emit(
+            work, segs, None, np.asarray(ids), k_packed, v_packed, inv
+        )

@@ -219,17 +219,20 @@ class InvariantChecker:
                     "I6", "_decode_launch_seq and _running_decode_ends "
                     "key different launches", context,
                 )
-            if not stamps <= queued.get("decode_done", set()):
+            # a unified (fused prefill+decode) launch stamps both maps and
+            # completes through a single "unified_done" event
+            unified = queued.get("unified_done", set())
+            if not stamps <= queued.get("decode_done", set()) | unified:
                 self._fail(
                     "I6", "decode launch stamp without an in-flight "
-                    "decode_done event", context,
+                    "decode_done/unified_done event", context,
                 )
-            if not set(eng._prefill_launch_epoch) <= queued.get(
-                "prefill_done", set()
+            if not set(eng._prefill_launch_epoch) <= (
+                queued.get("prefill_done", set()) | unified
             ):
                 self._fail(
                     "I6", "prefill epoch stamp without an in-flight "
-                    "prefill_done event", context,
+                    "prefill_done/unified_done event", context,
                 )
 
         # I7: failure/clock sanity -----------------------------------------

@@ -30,6 +30,9 @@ class Request:
     # progress
     generated: int = 0
     output_tokens: List[int] = field(default_factory=list)
+    # unified chunked prefill: tokens [0, prefill_pos) have been computed
+    # and written to the pool; the next chunk starts here
+    prefill_pos: int = 0
 
     # metrics (timestamps)
     prefill_start: Optional[float] = None

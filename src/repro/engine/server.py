@@ -38,6 +38,7 @@ from repro.manager.scheduler import (
     GlobalManager,
     ManagerConfig,
     PrefillBatch,
+    UnifiedWork,
 )
 from repro.manager.sib import SIB, HardwareSpec
 
@@ -225,10 +226,23 @@ class BaseServingEngine:
             self._on_prefill_done(payload)
         elif kind == "decode_done":
             self._on_decode_done(payload)
+        elif kind == "unified_done":
+            self._on_unified_done(payload)
         elif kind == "fail":
             self._apply_failure(payload)
         elif kind == "join":
             self._apply_join(payload)
+        if (
+            kind == "arrival"
+            and self.events
+            and self.events[0][0] <= self.clock
+            and self.events[0][2] == "arrival"
+        ):
+            # same-instant arrival burst: defer planning until the last
+            # arrival of the burst so the whole burst is admitted in ONE
+            # scheduling pass (one prefill batch / one decode group) instead
+            # of planning after each arrival with a partial view
+            return
         self._try_schedule()
 
     # hooks ------------------------------------------------------------
@@ -239,6 +253,9 @@ class BaseServingEngine:
         raise NotImplementedError
 
     def _on_decode_done(self, batch) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def _on_unified_done(self, work) -> None:  # pragma: no cover
         raise NotImplementedError
 
     # ------------------------------------------------------------- helpers
@@ -288,6 +305,7 @@ class BaseServingEngine:
         req.max_new_tokens -= req.generated  # folded tokens are input now
         req.generated = 0
         req.prefill_end = None
+        req.prefill_pos = 0  # unified chunk cursor restarts with the prefill
 
     def _apply_failure(self, inst: int) -> None:
         self.failed.add(inst)
@@ -417,6 +435,15 @@ class LoongServeEngine(BaseServingEngine):
         self._running_decode_ends: Dict[int, float] = {}  # gid -> end time
         self._decode_launch_seq: Dict[int, Dict[int, int]] = {}  # gid -> rid -> seq
         self._prefill_launch_epoch: Dict[int, Dict[int, int]] = {}  # bid -> rid -> n_evictions
+        # rids currently riding an in-flight unified chain (prefill chunks
+        # or interleaved decode rows): the scheduler must not launch them in
+        # a parallel decode group while the chain owns their iteration
+        self._in_unified: Set[int] = set()
+        # in-flight chains' instance sets (id(work) -> instances): decode
+        # groups overlapping one wait in `ready_decode` for the chain's next
+        # chunk boundary and ride the fused iteration instead of launching a
+        # competing standalone iteration on the same instances
+        self._active_unified: Dict[int, Set[int]] = {}
         self.executor = None
         if self.real:
             from repro.engine.executor import LocalExecutor, MeshExecutor
@@ -468,6 +495,34 @@ class LoongServeEngine(BaseServingEngine):
             plan = self.manager.schedule(
                 pending_view, self.ready_decode, idle, self.clock
             )
+            if not plan.prefill and pending_view:
+                # second-chance admission at the iteration boundary: groups
+                # sitting in `ready_decode` are BETWEEN iterations right
+                # now, so their instances are legal placement targets for a
+                # pending prompt the strictly-idle pass could not admit
+                # (iteration-level continuous batching).  The sequential
+                # path stalls the stripped groups for the whole monolithic
+                # prefill; the unified path fuses them into the chain as
+                # riders instead.  Safe to discard the first plan: a plan
+                # with no prefill batches reserved nothing in the pool.
+                boundary = [
+                    i for i in self.idle_instances() if i not in idle
+                ]
+                if boundary:
+                    # delay-execution's premise ("wait for busy instances
+                    # to free up") is already satisfied at the boundary —
+                    # don't let it defer the retry a second time
+                    saved = self.manager.mcfg.enable_delay_execution
+                    self.manager.mcfg.enable_delay_execution = False
+                    try:
+                        retry = self.manager.schedule(
+                            pending_view, self.ready_decode,
+                            idle + boundary, self.clock,
+                        )
+                    finally:
+                        self.manager.mcfg.enable_delay_execution = saved
+                    if retry.prefill:
+                        plan = retry
             if not plan.prefill and not plan.decode and not plan.migrations:
                 return
             self._execute_plan(plan)
@@ -494,8 +549,30 @@ class LoongServeEngine(BaseServingEngine):
                 if r in self.pending:
                     self.pending.remove(r)
                 r.phase = Phase.PREFILL
+                r.prefill_pos = 0
                 if r.prefill_start is None:
                     r.prefill_start = self.clock
+            if self._unified_eligible(b):
+                # unified continuous batching: instead of annexing the decode
+                # groups' instances for one long prefill (stalling their
+                # token flow), FUSE the groups that would stall — instance
+                # overlap or already stalled — into a chain of chunked
+                # prefill+decode iterations
+                fused = [
+                    g for g in self.ready_decode
+                    if set(g.instances) & set(b.instances) or not g.instances
+                ]
+                for g in fused:
+                    self.ready_decode.remove(g)
+                for g in self.ready_decode:
+                    g.instances = [
+                        i for i in g.instances if i not in b.instances
+                    ]
+                mig = max(
+                    (mig_delay.get(i, 0.0) for i in b.instances), default=0.0
+                )
+                self._launch_unified(UnifiedWork(b, fused), extra_delay=mig)
+                continue
             # drop annexed instances from stalled ready groups
             for g in self.ready_decode:
                 g.instances = [i for i in g.instances if i not in b.instances]
@@ -517,9 +594,27 @@ class LoongServeEngine(BaseServingEngine):
         # faster groups re-entering the queue sooner)
         launched = []
         soonest_end = min(self._running_decode_ends.values(), default=None)
+        # instances a prefill batch of THIS plan occupies: the manager built
+        # plan.decode before the annexation above stripped the ready groups,
+        # so mirror the strip on the fresh plan copies — an annexed group
+        # must stall (or ride the unified chain), not relaunch alongside
+        # the prefill on the instances it just lost
+        taken = {i for pb in plan.prefill for i in pb.instances}
         for g in plan.decode:
+            if taken:
+                g.instances = [i for i in g.instances if i not in taken]
             if not g.instances:
                 continue  # stalled (preempted) — retried next round
+            if any(r.rid in self._in_unified for r in g.requests):
+                continue  # riding an in-flight unified chain this iteration
+            if any(
+                set(g.instances) & insts
+                for insts in self._active_unified.values()
+            ):
+                # a unified chain owns (some of) these instances: hold the
+                # group in ready_decode so the chain absorbs it at its next
+                # chunk boundary instead of racing a standalone iteration
+                continue
             sum_kv = sum(r.seq_len for r in g.requests)
             dur = self.sib.decode_time(
                 g.dop, len(g.requests), sum_kv, g.instances
@@ -692,6 +787,197 @@ class LoongServeEngine(BaseServingEngine):
             )
             self.ready_decode.append(DecodeBatch(live, insts, masters))
 
+    # -------------------------------------------- unified continuous batching
+    def _unified_eligible(self, b: PrefillBatch) -> bool:
+        """A prefill batch runs as a unified chunked chain when the knob is
+        set, the executor has the fused path, and every prompt is
+        materialized (chunk packing slices real token ids)."""
+        return (
+            self.real
+            and self.manager.mcfg.prefill_chunk_tokens is not None
+            and self.executor is not None
+            and getattr(self.executor, "supports_unified", False)
+            and all(
+                r.prompt is not None and len(r.prompt) == r.input_len
+                for r in b.requests
+            )
+        )
+
+    def _next_chunks(self, work: UnifiedWork) -> Dict[int, Tuple[int, int]]:
+        """Chunk schedule for ONE chain link: walk the batch in order giving
+        each unfinished prompt its next contiguous slice until the
+        ``prefill_chunk_tokens`` budget runs out (the first prompt always
+        gets at least one token, so the chain advances)."""
+        budget = max(int(self.manager.mcfg.prefill_chunk_tokens), 1)
+        chunks: Dict[int, Tuple[int, int]] = {}
+        for r in work.batch.requests:
+            if r.prefill_pos >= r.input_len:
+                continue
+            if budget <= 0 and chunks:
+                break
+            ln = min(r.input_len - r.prefill_pos, max(budget, 1))
+            chunks[r.rid] = (r.prefill_pos, ln)
+            budget -= ln
+        return chunks
+
+    def _launch_unified(self, work: UnifiedWork,
+                        extra_delay: float = 0.0) -> None:
+        """Launch one link of a unified chain: recompute the chunk schedule
+        from the cursors, charge one fused iteration (chunked-prefill time +
+        one decode iteration for the riders) to the union of instances, and
+        stamp BOTH launch-consistency maps — the prefill eviction epochs and
+        the decode seq stamps guard the same completion event."""
+        work.chunks = self._next_chunks(work)
+        b = work.batch
+        insts = work.alive_instances(self.failed)
+        dop = max(len(insts), 1)
+        dur = extra_delay
+        clens = [ln for _, ln in work.chunks.values()]
+        if clens:
+            dur += self.sib.prefill_time(dop, clens, insts)
+        dreqs = [r for g in work.groups for r in g.requests]
+        if dreqs:
+            ddur = self.sib.decode_time(
+                dop, len(dreqs), sum(r.seq_len for r in dreqs), insts
+            )
+            for r in dreqs:
+                r.decode_exec_time += ddur
+            dur += ddur
+            self.metrics.decode_iters += 1
+        end = self.clock + dur
+        self._occupy(insts, end)
+        self.metrics.prefill_iters += 1
+        self._prefill_launch_epoch[id(work)] = {
+            r.rid: r.n_evictions for r in b.requests
+        }
+        self._decode_launch_seq[id(work)] = {r.rid: r.seq_len for r in dreqs}
+        self._running_decode_ends[id(work)] = end
+        for r in b.requests:
+            self._in_unified.add(r.rid)
+        for r in dreqs:
+            self._in_unified.add(r.rid)
+        self._active_unified[id(work)] = set(insts)
+        self._push(end, "unified_done", work)
+
+    def _on_unified_done(self, work: UnifiedWork) -> None:
+        """Completion of one chain link: run the fused executor step, apply
+        BOTH sides' completion processing (prefill cursor advance + decode
+        token placement), then either launch the next link (prompts still
+        mid-prefill) or dissolve the chain back into `ready_decode`."""
+        self._running_decode_ends.pop(id(work), None)
+        self._active_unified.pop(id(work), None)
+        launch_seq = self._decode_launch_seq.pop(id(work), None)
+        epoch = self._prefill_launch_epoch.pop(id(work), None)
+        for g in work.groups:
+            for r in g.requests:
+                self._in_unified.discard(r.rid)
+        b = work.batch
+        alive = []
+        for r in b.requests:
+            self._in_unified.discard(r.rid)
+            # the same in-flight-failure filters as _on_prefill_done
+            if r.phase is not Phase.PREFILL or (
+                epoch is not None and epoch.get(r.rid) != r.n_evictions
+            ):
+                continue
+            if self._placement_lost(b, r):
+                self.pool.free_request(r.rid)
+                self._requeue_for_recompute(r)
+                if r not in self.pending:
+                    self.pending.append(r)
+                continue
+            alive.append(r)
+        b.requests = alive
+        b.instances = [i for i in b.instances if i not in self.failed]
+        b.scale_down_to = [i for i in b.scale_down_to if i not in self.failed]
+        # the same stale-completion filters as _on_decode_done
+        groups = []
+        for g in work.groups:
+            galive = [
+                r for r in g.requests
+                if r.phase is Phase.DECODE
+                and (launch_seq is None or launch_seq.get(r.rid) == r.seq_len)
+            ]
+            if galive:
+                groups.append(DecodeBatch(
+                    galive, [i for i in g.instances if i not in self.failed],
+                    g.masters,
+                ))
+        work.groups = groups
+        work.chunks = {
+            r.rid: work.chunks[r.rid]
+            for r in b.requests if r.rid in work.chunks
+        }
+        if not b.requests and not groups:
+            return
+        insts = work.alive_instances(self.failed)
+        ok = self._dispatch_with_retry(
+            lambda: self._real_unified(work), insts, "unified"
+        )
+        if not ok:
+            # the fused step never ran: requeue the chunked prompts for
+            # recompute and send surviving riders back to the ready queue
+            for r in b.requests:
+                if r.phase is Phase.PREFILL:
+                    self.pool.free_request(r.rid)
+                    self._requeue_for_recompute(r)
+                    if r not in self.pending:
+                        self.pending.append(r)
+            for g in groups:
+                live = [r for r in g.requests if r.phase is Phase.DECODE]
+                if live:
+                    self.ready_decode.append(DecodeBatch(
+                        live, [i for i in g.instances if i not in self.failed],
+                        g.masters,
+                    ))
+            return
+        # ---- prefill side: advance cursors; completed prompts join decode
+        chunked = [r for r in b.requests if r.rid in work.chunks]
+        survivors = self._drain_quarantine(chunked)
+        completed = []
+        for r in survivors:
+            start, ln = work.chunks[r.rid]
+            r.prefill_pos = start + ln
+            if r.prefill_pos >= r.input_len:
+                r.prefill_end = self.clock
+                r.phase = Phase.DECODE
+                r.generated += 1  # the fused step emitted the first token
+                completed.append(r)
+        for r in [q for q in completed if q.done]:
+            self._finish_request(r)
+            if r.norm_output_latency():
+                self.manager.note_finished_decode(r.norm_output_latency())
+        new_dec = [r for r in completed if not r.done]
+        # ---- decode side: the standard completion epilogue, per group
+        out_groups = []
+        for g in groups:
+            live = self._decode_epilogue(g)
+            if live is not None:
+                out_groups.append(live)
+        if new_dec:
+            insts_nd = [i for i in b.scale_down_to if i not in self.failed]
+            masters = (
+                self.manager._assign_masters(new_dec, insts_nd)
+                if insts_nd else {}
+            )
+            out_groups.append(DecodeBatch(new_dec, insts_nd, masters))
+        # ---- continue the chain while any prompt is mid-prefill
+        remaining = [r for r in b.requests if r.phase is Phase.PREFILL]
+        if remaining:
+            b.requests = remaining
+            work.groups = [g for g in out_groups if g.requests]
+            # continuous batching at the chunk boundary: decode groups that
+            # became ready since the last link and would stall on (or
+            # overlap) this chain's instances ride the next iteration
+            insts = set(work.alive_instances(self.failed))
+            for g in list(self.ready_decode):
+                if set(g.instances) & insts or not g.instances:
+                    self.ready_decode.remove(g)
+                    work.groups.append(g)
+            self._launch_unified(work)
+        else:
+            self.ready_decode.extend(g for g in out_groups if g.requests)
+
     # ---------------------------------------------------------- decode done
     def _placement_order(self, r: Request, g: DecodeBatch) -> List[int]:
         """KV-append probe order for one decoded token: the request's master
@@ -809,9 +1095,19 @@ class LoongServeEngine(BaseServingEngine):
                 if r.rid in self._logit_poison:
                     self._logit_poison.discard(r.rid)
                     self._quarantine.add(r.rid)
+        live = self._decode_epilogue(g)
+        if live is not None:
+            self.ready_decode.append(live)
+
+    def _decode_epilogue(self, g: DecodeBatch) -> Optional[DecodeBatch]:
+        """Post-compute half of a decode completion: quarantine drain, token
+        accounting, per-token KV placement (with OOM preemption), finishes.
+        Returns the surviving group for the caller to requeue — the plain
+        decode path appends it to `ready_decode`; the unified chain carries
+        it into its next fused iteration instead."""
         survivors = self._drain_quarantine(g.requests)
         if not survivors:
-            return
+            return None
         if len(survivors) < len(g.requests):
             g = DecodeBatch(survivors, g.instances, g.masters)
         done, live = [], []
@@ -847,14 +1143,15 @@ class LoongServeEngine(BaseServingEngine):
             if r.norm_output_latency():
                 self.manager.note_finished_decode(r.norm_output_latency())
             self._real_cache.pop(r.rid, None)
-        if live:
-            # always re-filter failed instances (an instance that died
-            # mid-flight holding none of this group's KV is not caught by
-            # the alive-filter above)
-            self.ready_decode.append(DecodeBatch(
-                live, [i for i in g.instances if i not in self.failed],
-                g.masters,
-            ))
+        if not live:
+            return None
+        # always re-filter failed instances (an instance that died
+        # mid-flight holding none of this group's KV is not caught by
+        # the alive-filter above)
+        return DecodeBatch(
+            live, [i for i in g.instances if i not in self.failed],
+            g.masters,
+        )
 
     # ----------------------------------------------------------- real compute
     # Thin dispatch only: the bodies live in engine/executor.py behind the
@@ -877,6 +1174,9 @@ class LoongServeEngine(BaseServingEngine):
 
     def _real_decode_serial(self, g: DecodeBatch) -> None:
         return self.executor.decode_serial(g)
+
+    def _real_unified(self, work: UnifiedWork) -> None:
+        return self.executor.unified(work)
 
     @property
     def _prefill_programs(self):
@@ -929,3 +1229,5 @@ class LoongServeEngine(BaseServingEngine):
         self._running_decode_ends = {}
         self._decode_launch_seq = {}
         self._prefill_launch_epoch = {}
+        self._in_unified = set()
+        self._active_unified = {}

@@ -44,11 +44,18 @@ cannot interact.  After n steps the carried state finalizes to exactly the
 single-launch packed result (same math, chunked).
 
 Deployment note: the in-process replay (LocalExecutor) passes static shard
-ids, so this Pallas kernel applies directly; the shard_map mesh path
-(`core.esp.ring_packed_prefill_spmd`) has TRACED shard ids (lax.axis_index)
-and therefore uses the banded XLA fallback (`ref.packed_prefill_ring_chunk_
-banded`, which takes shard ids as jnp values) — per-rank specialization of
-this kernel on TPU is a ROADMAP item.
+ids, so this Pallas kernel applies directly.  The shard_map mesh path
+(`core.esp.ring_packed_prefill_spmd`) has TRACED shard ids
+(lax.axis_index); it recovers static ids with the same ``lax.switch``
+static-branch trick the SPMD decode path uses: `esp.switched_ring_chunk`
+enumerates one branch per rank (the ring step is a python loop constant),
+each baking ``q_shard=rank, k_shard=(rank-step) % n`` as the compile-time
+constants the tile-skip predicates need.  Under ``impl="xla"`` the banded
+variant (`ref.packed_prefill_ring_chunk_banded`, shard ids as jnp values)
+still dispatches directly with no switch.  The switch path is validated
+under ``impl="interpret"`` in the mesh suite; running it compiled on real
+TPU hardware (each branch lowering to this Pallas kernel) is the remaining
+ROADMAP item — hardware validation only, the program structure is in.
 """
 from __future__ import annotations
 

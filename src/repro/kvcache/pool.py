@@ -591,6 +591,41 @@ class KVPool:
                 table[b, : st.n_pages] = st.pages[: st.n_pages]
         return table, lengths
 
+    def prefix_block_table(
+        self, request_ids: Sequence[int], limits: Sequence[int]
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """`block_table` restricted to each request's FILLED prefix.
+
+        ``block_table`` counts every allocated slot — including slots a
+        mid-prefill request reserved up front but has not written yet.  The
+        unified chunked step must attend only positions ``< limits[b]`` (the
+        request's prefill cursor; ``seq_len - 1`` for decode rows), so this
+        returns the same table with lengths clipped to the filled prefix.
+        Valid because `alloc` appends slots in ascending position order (the
+        striped placement plans are per-instance ascending), so the filled
+        prefix occupies exactly the first ``eff`` slots of the table order —
+        asserted below.
+        """
+        states = [self._reqs.get(rid) for rid in request_ids]
+        lengths = np.zeros(len(states), np.int32)
+        for b, st in enumerate(states):
+            if st is None:
+                continue
+            pos = st.pos[: st.n_tok]
+            lim = int(limits[b])
+            eff = int((pos < lim).sum())
+            assert (pos[:eff] < lim).all() and (pos[eff:] >= lim).all(), (
+                "prefix_block_table: allocation order is not position-sorted",
+                request_ids[b], lim, pos,
+            )
+            lengths[b] = eff
+        max_pages = max((st.n_pages for st in states if st), default=0)
+        table = np.zeros((len(states), max_pages), np.int32)
+        for b, st in enumerate(states):
+            if st:
+                table[b, : st.n_pages] = st.pages[: st.n_pages]
+        return table, lengths
+
     @property
     def k_pages(self) -> np.ndarray:
         """[n_attn, n_pages, page_size, KVH, D] view of the K storage."""

@@ -56,6 +56,30 @@ class DecodeBatch:
 
 
 @dataclass
+class UnifiedWork:
+    """One link of a unified continuous-batching chain: a prefill batch
+    advanced chunk-by-chunk (``prefill_chunk_tokens`` per iteration) with
+    in-flight decode groups riding the SAME fused iteration, so decode
+    tokens keep flowing while a long prompt prefills (the LoongServe
+    unified iteration; executed by `Executor.unified`).
+
+    ``chunks`` maps rid -> (start, length): the slice of the request's
+    prompt packed THIS iteration (recomputed by the engine per link from
+    each request's ``prefill_pos`` cursor).  A batch request absent from
+    ``chunks`` waits this iteration (chunk budget exhausted)."""
+
+    batch: PrefillBatch
+    groups: List[DecodeBatch] = field(default_factory=list)
+    chunks: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+
+    def alive_instances(self, failed) -> List[int]:
+        insts = {i for i in self.batch.instances if i not in failed}
+        for g in self.groups:
+            insts.update(i for i in g.instances if i not in failed)
+        return sorted(insts)
+
+
+@dataclass
 class Migration:
     rid: int
     src: int
@@ -82,6 +106,12 @@ class ManagerConfig:
     future_kv_reserve_frac: float = 0.2  # fraction of max_total_len reserved
     scale_up_batch_threshold: Optional[int] = None  # None -> SIB ridge point
     watermark_frac: float = 0.02  # keep-free watermark per instance
+    # unified continuous batching: when set, real-mode prefill batches run
+    # as a chain of fused iterations of at most this many prefill tokens
+    # each, with in-flight decode groups interleaved into every iteration
+    # (decode TBT stays bounded during long-prompt prefill).  None keeps
+    # the one-shot packed prefill.
+    prefill_chunk_tokens: Optional[int] = None
 
 
 class GlobalManager:

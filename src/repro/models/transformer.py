@@ -293,7 +293,8 @@ class Model:
 
     # ====================================================== dense-like stack
     def _dense_stack(self, params, x, positions, *, return_kv, k_caches=None,
-                     v_caches=None, cache_len=None, decode=False):
+                     v_caches=None, cache_len=None, decode=False,
+                     unroll=False):
         cfg = self.cfg
         naux = jnp.float32(0.0)
 
@@ -328,6 +329,21 @@ class Model:
                 kc = k_caches[li] if k_caches is not None else None
                 vc = v_caches[li] if v_caches is not None else None
                 carry, kv = body(carry, lp, kc, vc)
+                kv_list.append(kv)
+            x, aux = carry
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+            return x, aux, kvs
+
+        if unroll:
+            # static python loop on the PREFILL branch: an attention impl
+            # that dispatches per-layer paged operands (core.unified) needs a
+            # python-level layer cursor, which lax.scan cannot provide.
+            n_layers = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+            carry = (x, naux)
+            kv_list = []
+            for li in range(n_layers):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                carry, kv = body(carry, lp)
                 kv_list.append(kv)
             x, aux = carry
             kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
@@ -497,8 +513,27 @@ class Model:
             x = jnp.einsum("bsd,s->bd", x, sel)[:, None, :]
         return self.unembed(params, x), cache
 
+    def prefill_packed_hidden(
+        self, params, batch, positions, *, unroll=False
+    ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+        """The stack half of `prefill_packed`: embed + dense stack over the
+        packed token axis, returning the final hidden states instead of
+        logits — (x [1, T, d], (k, v) packed per-layer KV [L, T, KVH, D]).
+        The SPMD unified step calls this per rank (each rank holds a token
+        stripe) and does its own gather + unembed; ``unroll=True`` runs the
+        layer loop as a static python loop so a per-layer attention impl
+        (core.unified) can keep a layer cursor."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm"), cfg.family
+        x = self.embed_inputs(params, batch)  # [1, T, d]
+        x, _, kvs = self._dense_stack(
+            params, x, positions, return_kv=True, unroll=unroll
+        )
+        k, v = kvs  # [L, 1, T, KVH, D]
+        return x, (k[:, 0], v[:, 0])
+
     def prefill_packed(
-        self, params, batch, positions, last_idx
+        self, params, batch, positions, last_idx, *, unroll=False
     ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
         """Packed ragged prefill: a whole batch of prompts concatenated on
         ONE token axis (batch dim 1).  `positions` are per-token LOCAL
@@ -510,14 +545,12 @@ class Model:
         materialized.  Returns (logits [B, V], (k, v) packed per-layer KV
         [L, T, KVH, D]) — the KV that `kvcache.pool.fill_packed` scatters
         straight into paged device storage."""
-        cfg = self.cfg
-        assert cfg.family in ("dense", "vlm"), cfg.family
-        x = self.embed_inputs(params, batch)  # [1, T, d]
-        x, _, kvs = self._dense_stack(params, x, positions, return_kv=True)
-        k, v = kvs  # [L, 1, T, KVH, D]
+        x, kv = self.prefill_packed_hidden(
+            params, batch, positions, unroll=unroll
+        )
         sel = jnp.take(x[0], jnp.asarray(last_idx, jnp.int32), axis=0)
         logits = self.unembed(params, sel[None])[0]  # [B, V]
-        return logits, (k[:, 0], v[:, 0])
+        return logits, kv
 
     def decode(self, params, tokens, cache: Cache) -> Tuple[jnp.ndarray, Cache]:
         """One decode step. tokens [B] or [B,1]. Returns (logits [B,V],

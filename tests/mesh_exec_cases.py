@@ -603,8 +603,123 @@ def case_join_instance():
     print("JOIN-INSTANCE-OK")
 
 
+def case_unified():
+    """ISSUE-9 unified continuous-batching step on the mesh: (1) engine e2e
+    with `prefill_chunk_tokens` set — short prompts decode WHILE a long
+    prompt's chunked prefill runs, the fused iteration dispatches as ONE
+    shard_map program (`unified_iteration_spmd`), decode rows ride prefill
+    iterations, and every token sequence matches the serial dense oracle;
+    (2) StableHLO evidence that the interleaved path really is one fused
+    program: the compiled unified program contains BOTH the prefill ring's
+    collective-permute and the decode merge's reduce-scatter/all-reduce in a
+    single module; (3) the switched ring chunk (static per-rank lax.switch
+    dispatch, ISSUE-9 satellite) stays parity-exact with the interpret-mode
+    Pallas kernel INSIDE the shard_map region."""
+    import copy
+
+    from repro.manager.scheduler import ManagerConfig
+
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    dop = 2
+    mesh = make_test_mesh(data=dop, model=8 // dop)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for _ in range(4):
+        reqs.append(Request(
+            input_len=24, max_new_tokens=24, arrival=0.0,
+            prompt=rng.integers(0, CFG.vocab_size, 24).tolist(),
+        ))
+    reqs.append(Request(
+        input_len=300, max_new_tokens=6, arrival=0.01,
+        prompt=rng.integers(0, CFG.vocab_size, 300).tolist(),
+    ))
+    ops.reset_dispatch_counts()
+    eng = LoongServeEngine(CFG, dop, 416, store_values=True, model=model,
+                           params=params, page_size=16, mesh=mesh,
+                           mcfg=ManagerConfig(prefill_chunk_tokens=48))
+    assert type(eng.executor).__name__ == "MeshExecutor"
+    rs = copy.deepcopy(reqs)
+    for r in rs:
+        eng.submit(r)
+    m = eng.run()
+    assert len(m.finished) == len(rs)
+    d = dict(ops.dispatch_counts)
+    # the fused path really ran as SPMD shard_map programs, with decode
+    # rows riding prefill iterations
+    assert d.get("unified_iteration_spmd", 0) >= 1, d
+    assert d.get("unified_step", 0) >= 1, d
+    assert d.get("unified_decode_tokens", 0) > 0, d
+    assert d.get("unified_prefill_tokens", 0) == sum(
+        r.input_len for r in rs
+    ), d
+    unified_keys = [
+        k for k in eng.executor._programs if k[0] == "unified_spmd"
+    ]
+    assert unified_keys, list(eng.executor._programs)
+    for r in rs:
+        want = kref.serial_decode_oracle(
+            model, params, r.prompt, r.max_new_tokens - 1
+        )
+        assert want == r.output_tokens, (r.rid, want, r.output_tokens)
+
+    # ---- StableHLO: one compiled module holds BOTH phases' collectives —
+    # the ring's collective-permute (prefill chunk plane) and the merge's
+    # reduce-scatter (decode prefix plane)
+    from repro.engine.executor import _USeg
+    from repro.manager.scheduler import PrefillBatch, UnifiedWork
+
+    eng2 = LoongServeEngine(CFG, dop, 416, store_values=True, model=model,
+                           params=params, page_size=16, mesh=mesh,
+                           mcfg=ManagerConfig(prefill_chunk_tokens=48))
+    # a 600-token prompt exceeds one 416-slot pool, so its placement spans
+    # both instances; resuming at 480 gives every rank a prefix plane
+    batch = _prefill_batch(eng2, rng, [600], max_new=4)
+    r_long = batch.requests[0]
+    work = UnifiedWork(batch, [])
+    work.chunks = {r_long.rid: (480, 48)}  # a mid-prompt resumed chunk
+    segs = eng2.executor._unified_segments(work)
+    setup = eng2.executor._unified_spmd_setup(work, segs)
+    assert setup is not None
+    fn, args, _ = setup
+    prev = eng2.model.attn_impl
+    eng2.model.attn_impl = eng2.executor._unified_impl
+    try:
+        txt = fn.lower(*args).compile().as_text()
+    finally:
+        eng2.model.attn_impl = prev
+    assert "collective-permute" in txt, "prefill ring plane missing"
+    assert "reduce-scatter" in txt, "decode merge plane missing"
+    assert "all-reduce" in txt, "pmax LSE exchange missing"
+
+    # ---- switched ring chunk through the interpret-mode Pallas kernel:
+    # the per-rank lax.switch static specialization inside shard_map == the
+    # dense packed oracle
+    lens = [5, 1, 17, 9, 12]
+    h, kvh, hd = 4, 2, 32
+    q, k, v, off = _packed_case(0, lens, h, kvh, hd, bucket=64)
+    total = sum(lens)
+    want = np.asarray(kref.packed_prefill_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(off),
+    ))
+    for n_ring in (2, 4):
+        ring_mesh = make_test_mesh(data=n_ring, model=1)
+        out = np.asarray(jax.jit(
+            lambda q_, k_, v_, o_, _m=ring_mesh: esp.ring_packed_prefill_spmd(
+                _m, q_, k_, v_, o_, max_seq_len=32, block_q=8, block_k=8,
+                impl="interpret",
+            )
+        )(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(off)))
+        np.testing.assert_allclose(
+            out[:total], want[:total], atol=2e-5,
+            err_msg=f"interpret switched ring n={n_ring}",
+        )
+    print("UNIFIED-OK")
+
+
 CASES = {
     "ring_parity": case_ring_parity,
+    "unified": case_unified,
     "join_instance": case_join_instance,
     "engine_e2e": case_engine_e2e,
     "checkpoint_restore": case_checkpoint_restore,

@@ -146,7 +146,10 @@ def test_real_chaos_soak_oracle_parity(real_model):
         ballast_frac=0.3, dispatch_fault_rate=0.2, nan_rate=0.12,
         min_alive=2,
     )
-    monkey, chk = _armed(eng, chaos, seed=5)
+    # seed chosen so every injector fires within the soak window under the
+    # current scheduler (boundary admission batches the workload into fewer
+    # events, so the old seed's 5% fail draw never landed)
+    monkey, chk = _armed(eng, chaos, seed=7)
     eng.run(max_events=300)
     monkey.disarm()
     eng.run()
@@ -192,7 +195,8 @@ def test_decode_oom_preempts_and_recomputes():
         if kind != "decode_done":
             return
         if state["phase"] == 0:  # squeeze: leave < max_new free slots
-            e.pool.pools[0].alloc(-99, list(range(1880)))
+            grab = e.pool.pools[0].free_slots - 20
+            e.pool.pools[0].alloc(-99, list(range(grab)))
             state["phase"] = 1
         elif state["phase"] == 1 and e.metrics.preemptions > 0:
             e.pool.pools[0].free_request(-99)  # pressure subsides
@@ -243,9 +247,13 @@ def test_dropped_migration_counted_not_fatal():
     eng.run(max_events=1500)
     monkey.disarm()
     eng.pool.migrate_request = orig
-    m = eng.run()
+    # while patched, every refusal must be dropped AND counted, 1:1
     assert attempts[0] > 0
-    assert m.dropped_migrations == attempts[0]
+    assert eng.metrics.dropped_migrations == attempts[0]
+    m = eng.run()
+    # the drain (real pool) may legitimately drop more on planner/pool
+    # divergence — also counted, never fatal
+    assert m.dropped_migrations >= attempts[0]
     assert len(m.finished) == len(reqs)
     assert chk.leaked_slots() == 0
 

@@ -66,3 +66,7 @@ def test_mesh_decode_flop_census():
 
 def test_mesh_join_instance_recovery():
     _run_case("join_instance")
+
+
+def test_mesh_unified_step():
+    _run_case("unified")
