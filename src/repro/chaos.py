@@ -10,7 +10,11 @@ across runs).
 Injectors (each armed by a nonzero rate in `ChaosConfig`):
 
   * fail / rejoin storms — `fail_instance` on a random alive instance
-    (never below `min_alive`), `join_instance` on a random failed one;
+    (never below `min_alive`), `join_instance` on a random failed one.
+    Every observed failure is audited post-hoc (salvage-aware): the dead
+    pool must be drained and each request in the engine's salvage-recovery
+    window must hold exactly its declared coverage on the survivors;
+    `salvage_ratio()` reports salvaged/(salvaged+recomputed) over the soak;
   * stragglers — stretch a busy instance's remaining `busy_until` interval
     by a random multiplier (the scheduler routes around it), optionally
     degrading its persistent SIB speed;
@@ -125,6 +129,24 @@ class ChaosMonkey:
 
     def _on_event(self, eng, kind, payload) -> None:
         self.n_events += 1
+        # salvage-aware failure audit: hooks fire AFTER the event is
+        # handled, so a "fail" event is observed post-`_apply_failure` —
+        # the dead pool must be empty (shards either salvaged off it or
+        # freed for recompute) and every request inside the recovery
+        # window must hold exactly its declared coverage on survivors.
+        # Pure asserts: no rng draws, so the trace stays seed-aligned.
+        if kind == "fail" and payload in eng.failed:
+            inst = payload
+            leftover = list(eng.pool.pools[inst].requests())
+            assert not leftover, (
+                f"chaos: failed instance {inst} still holds rids {leftover}"
+            )
+            for rid, rec in getattr(eng, "_recovering", {}).items():
+                held = eng.pool.request_tokens(rid)
+                assert held == rec.expected, (
+                    f"chaos: recovering rid {rid} holds {held} tokens "
+                    f"fleet-wide, declared coverage {rec.expected}"
+                )
         cfg = self.cfg
         if (
             cfg.max_injections is not None
@@ -230,3 +252,10 @@ class ChaosMonkey:
     def trace_fingerprint(self) -> Tuple[Tuple[Any, ...], ...]:
         """Hashable trace for equality assertions across runs."""
         return tuple(self.trace)
+
+    def salvage_ratio(self) -> float:
+        """Fraction of fault-affected computed tokens retained in place by
+        salvage (vs recomputed) over the soak so far — the headline
+        recovery-efficiency metric (1.0 = every failure fully salvaged,
+        0.0 = every failure fell back to full recompute)."""
+        return self.eng.metrics.snapshot()["salvage_ratio"]

@@ -595,6 +595,12 @@ def unified_iteration_spmd(
     path, the SPMD program has no host NaN guard — chaos NaN injection is a
     LocalExecutor concern (documented degradation gap).
 
+    The chunk schedule is position-agnostic: a segment may start ANYWHERE in
+    its request as long as the pools cover every lower position (the
+    fault-recovery hole-filling schedule — see `core.unified` — rides this
+    same program; the engine marks hole segments non-final so their rows are
+    never sampled).
+
     toks [T] int32 STRIPED order, sharded over ``sp_axis`` (T % n == 0);
     positions [T] int32 replicated, striped order (prefix query_pos; ranks
     slice their own stripe for RoPE); seq_offsets [S+1] replicated GLOBAL

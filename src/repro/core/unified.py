@@ -31,6 +31,19 @@ position is < the chunk's first position, so the prefix partial needs no
 causal mask beyond slot validity (+ the per-token window predicate on global
 positions).  Bucket-padding tokens form a trailing segment that attends only
 itself causally and is never sampled or scattered.
+
+Hole-filling chunk schedules (elastic fault recovery): nothing above assumes
+a chunk starts at the request's prefill frontier — only that the pool holds
+every position BELOW the chunk's start (`prefix_block_table`'s coverage
+contract).  So when an instance failure loses a token span whose higher
+positions survive on other instances, the recovery chain replays the lost
+span as ordinary chunks: the PREFIX partial reads the salvaged pages, the
+chunk partial recomputes only the hole, and the engine schedules holes
+strictly ascending and before the frontier so the coverage contract holds at
+every link.  A decode-phase request re-feeds its already-emitted tokens over
+the hole (they are inputs now, not samples) and resumes decode at its
+cursor.  Recovery is therefore the SAME unified iteration — no dedicated
+recovery kernel, and the bit-exactness argument above applies unchanged.
 """
 from __future__ import annotations
 

@@ -49,6 +49,19 @@ class _USeg(NamedTuple):
     final: bool  # sample a token from this segment's last row
 
 
+def _token_span(r, start: int, ln: int) -> np.ndarray:
+    """Token ids at positions [start, start+ln): prompt ids below
+    `input_len`, generated tokens above (token at position p >= input_len
+    is output_tokens[p - input_len] — what a decode-resume recovery hole
+    re-feeds when the lost stripe covers generated positions)."""
+    end = start + ln
+    out = list(r.prompt[start:min(end, r.input_len)])
+    if end > r.input_len:
+        lo = max(start, r.input_len) - r.input_len
+        out += list(r.output_tokens[lo:end - r.input_len])
+    return np.asarray(out, np.int32)
+
+
 class LocalExecutor:
     """In-process executor: one device, ring replayed as a chunk schedule."""
 
@@ -111,6 +124,12 @@ class LocalExecutor:
     @property
     def _decode_programs(self) -> Dict[Tuple, Any]:
         return {k[1:]: v for k, v in self._programs.items() if k[0] == "decode"}
+
+    def on_instance_failed(self, inst: int) -> None:
+        """Failure notification from the engine. The in-process executor
+        holds no per-instance compiled state (programs are keyed by bucket
+        shape only), so there is nothing to purge; the mesh executor
+        overrides this to drop sub-meshes containing the dead rank."""
 
     # ------------------------------------------------------------ NaN guard
     def _guard_logits(self, r, row):
@@ -447,14 +466,24 @@ class LocalExecutor:
         before its chunk cursor; a decode row's is its whole cache (tokens
         0..seq_len-2 — the processed token's KV is produced by this step)."""
         segs: List[_USeg] = []
+        recovering = getattr(self.eng, "_recovering", {})
         for r in work.batch.requests:
             if r.rid not in work.chunks:
                 continue  # out of chunk budget this iteration
             start, ln = work.chunks[r.rid]
-            assert ln > 0 and start + ln <= r.input_len, (start, ln, r.input_len)
-            segs.append(
-                _USeg(r, False, start, ln, start, start + ln == r.input_len)
+            # a decode-resume recovery hole may cover generated positions
+            # (up to seq_len - 2), not just the prompt
+            hi = max(r.input_len, r.seq_len - 1)
+            assert ln > 0 and start + ln <= hi, (start, ln, r.input_len, hi)
+            rec = recovering.get(r.rid)
+            # hole chunks of a decode-resume recovery NEVER sample: the
+            # request's tokens already exist — it re-enters decode at its
+            # cursor once coverage is whole (a hole ending exactly at
+            # input_len must not re-emit the first generated token)
+            final = start + ln == r.input_len and (
+                rec is None or not rec.resume_decode
             )
+            segs.append(_USeg(r, False, start, ln, start, final))
         for g in work.groups:
             for r in g.requests:
                 segs.append(_USeg(r, True, r.seq_len - 1, 1, r.seq_len - 1, True))
@@ -480,9 +509,7 @@ class LocalExecutor:
             if s.decode:
                 tokens[c] = s.r.output_tokens[-1]
             else:
-                tokens[c : c + s.ln] = np.asarray(
-                    s.r.prompt[s.start : s.start + s.ln], np.int32
-                )
+                tokens[c : c + s.ln] = _token_span(s.r, s.start, s.ln)
             positions[c : c + s.ln] = np.arange(s.start, s.start + s.ln)
             c += s.ln
             offsets[b + 1] = c
@@ -760,6 +787,24 @@ class MeshExecutor(LocalExecutor):
         # move the data axis first, take coordinate 0 of every other axis
         devs = np_.moveaxis(devs, data_ax, 0)
         return [devs[i].flat[0] for i in range(devs.shape[0])]
+
+    def on_instance_failed(self, inst: int) -> None:
+        """Purge every cached sub-mesh containing the dead rank, plus the
+        replicated params and compiled programs baked to those meshes.  A
+        surviving group re-forms at DoP−1 through the normal `_group_mesh`
+        / `_decode_mesh` path — the reduced-DoP program compiles (or LRU-
+        hits) on first use, exactly like any other elastic resize."""
+        dead = []
+        for cache in (self._group_meshes, self._decode_meshes):
+            for key in [k for k in cache if inst in k]:
+                m = cache.pop(key)
+                if m is not None:
+                    dead.append(m)
+        for m in dead:
+            self._params_rep.pop(m, None)
+        if dead:
+            for key in [k for k in self._programs if any(m in key for m in dead)]:
+                del self._programs[key]
 
     def _group_mesh(self, instances):
         """Sub-mesh ("data", "model") over exactly the group's devices.

@@ -14,9 +14,13 @@ Two compute modes:
            through the pools exactly as the plans dictate (used by tests and
            the runnable examples; also the source of SIB profiles).
 
-Fault tolerance: `fail_instance` drops an instance and its KV shards —
-affected decode requests are re-queued for prefill recompute; `join_instance`
-adds fresh capacity; `checkpoint`/`restore` snapshot the full serving state.
+Fault tolerance: `fail_instance` drops an instance and its KV shards.
+Affected requests are SALVAGED where possible — surviving instances' KV
+stays registered, only the dead rank's stripe is re-prefilled by a recovery
+chain, and the request resumes at its cursor (elastic scale-down as the
+fault path; `RecoveryState`/`_try_salvage`) — with full prefill recompute
+as the fallback; `join_instance` adds fresh capacity; `checkpoint`/`restore`
+snapshot the full serving state including in-flight unified chains.
 Elasticity is the recovery mechanism (DESIGN.md §7).
 """
 from __future__ import annotations
@@ -59,7 +63,8 @@ class EngineMetrics:
     dispatch_declared_failures: int = 0  # retry budget exhausted -> failure
     nan_quarantined: int = 0  # poisoned-logit requests requeued
     preemptions: int = 0  # decode-OOM evictions (victim or self)
-    recomputed_tokens: int = 0  # tokens folded back into prefill recompute
+    recomputed_tokens: int = 0  # previously-computed tokens lost + re-prefilled
+    salvaged_tokens: int = 0  # computed tokens retained in place by fault salvage
     backpressure_deferrals: int = 0  # scheduling rounds that deferred admits
 
     def summary(self) -> Dict[str, float]:
@@ -77,6 +82,7 @@ class EngineMetrics:
             "nan_quarantined": self.nan_quarantined,
             "preemptions": self.preemptions,
             "recomputed_tokens": self.recomputed_tokens,
+            "salvaged_tokens": self.salvaged_tokens,
             "backpressure_deferrals": self.backpressure_deferrals,
         }
         if fin:
@@ -93,6 +99,39 @@ class EngineMetrics:
             toks = sum(r.seq_len for r in fin)
             out["throughput_tok_s"] = toks / max(span, 1e-9)
         return out
+
+    def snapshot(self) -> Dict[str, float]:
+        """`summary()` plus derived recovery efficiency: `salvage_ratio` is
+        the fraction of failure-touched computed KV that was retained in
+        place instead of re-prefilled (1.0 = every failure was absorbed by
+        pure scale-down resume, 0.0 = every failure fell back to full
+        recompute; 0.0 also when no failure touched any computed KV)."""
+        out = self.summary()
+        denom = self.salvaged_tokens + self.recomputed_tokens
+        out["salvage_ratio"] = self.salvaged_tokens / denom if denom else 0.0
+        return out
+
+
+@dataclass
+class RecoveryState:
+    """Per-request elastic fault-recovery bookkeeping (DESIGN.md §7).
+
+    A SALVAGING request keeps its surviving KV shards registered in the
+    pools; ``spans`` are the dead rank's *computed* stripe runs, consumed
+    front-to-back by the recovery chain's hole chunks (a span start is the
+    chunk start, so positions below it are fully covered — the unified
+    PREFIX partial reads the salvaged pages).  ``expected`` is the
+    allocated-coverage target ({0..expected-1}; the lost positions are
+    re-reserved on survivors at salvage time, so invariant I3 validates
+    this declared coverage during the relaxation window).  When the spans
+    drain, ``resume_decode`` requests re-enter DECODE at their cursor
+    (RESUMING -> running, no token emitted); mid-prefill requests simply
+    continue frontier chunking."""
+
+    spans: List[Tuple[int, int]]
+    expected: int
+    resume_decode: bool
+    salvaged: int
 
 
 _event_seq = itertools.count()
@@ -152,6 +191,13 @@ class BaseServingEngine:
         # dispatching instance is declared failed
         self.dispatch_max_retries = dispatch_max_retries
         self.dispatch_backoff = dispatch_backoff
+        # dedicated deterministic stream for dispatch-backoff jitter: drawing
+        # from `self.rng` would shift the sim token stream (and the chaos
+        # monkey owns its own rng), so same-seed replay stays bit-for-bit
+        self._backoff_rng = np.random.default_rng([seed, 0xBAC0FF])
+        # rid -> RecoveryState for requests whose failure was absorbed by
+        # KV salvage + scale-down resume instead of full recompute
+        self._recovering: Dict[int, RecoveryState] = {}
         # observers called as hook(engine, kind, payload) after EVERY handled
         # event (chaos injection, invariant sanitizer, tracing)
         self.event_hooks: List[Any] = []
@@ -288,14 +334,31 @@ class BaseServingEngine:
     def join_instance(self, inst: int, at: Optional[float] = None) -> None:
         self._push(at if at is not None else self.clock, "join", inst)
 
-    def _requeue_for_recompute(self, req: Request) -> None:
+    def _requeue_for_recompute(self, req: Request,
+                               lost: Optional[int] = None) -> None:
         """Evicted-KV recovery: the request re-enters prefill over everything
         generated so far.  The emitted tokens become part of the new prompt
         (in real mode literally, so the recompute reproduces the exact
         sequence) and move from the generation budget into the input — KV
         accounting stays exact (seq_len == recomputed prompt + new tokens,
-        no double count of the folded prefix)."""
-        self.metrics.recomputed_tokens += req.seq_len
+        no double count of the folded prefix).
+
+        ``lost`` is the recompute charge: previously-COMPUTED tokens whose
+        KV is being discarded.  Defaults to the full computed span —
+        ``seq_len`` for decode-phase requests, the chunk cursor for
+        mid-prefill ones — minus any spans a fault salvage already charged
+        (its surviving `RecoveryState` holes were never recomputed)."""
+        if lost is None:
+            rec = self._recovering.get(req.rid)
+            if rec is not None:
+                base = rec.expected if rec.resume_decode else req.prefill_pos
+                lost = max(base - sum(e - s for s, e in rec.spans), 0)
+            elif req.phase is Phase.DECODE:
+                lost = req.seq_len
+            else:
+                lost = req.prefill_pos
+        self.metrics.recomputed_tokens += lost
+        self._recovering.pop(req.rid, None)
         req.n_evictions += 1
         req.phase = Phase.PENDING
         if req.prompt is not None and len(req.prompt) < req.seq_len:
@@ -310,18 +373,45 @@ class BaseServingEngine:
     def _apply_failure(self, inst: int) -> None:
         self.failed.add(inst)
         self.busy_until[inst] = float("inf")
-        # KV shards on the instance are lost: re-queue affected requests for
-        # prefill recompute (generated prefix becomes part of the new prompt).
+        # KV shards on the instance are lost.  Elastic fault recovery first
+        # (`_try_salvage`, engine-specific): survivors keep their shards of
+        # an affected request registered and only the dead rank's stripe is
+        # re-prefilled by a recovery chain.  Requests salvage cannot cover
+        # fall back to full recompute (generated prefix becomes part of the
+        # new prompt).
         affected = list(self.pool.pools[inst].requests())
+        salvaged: List[Request] = []
         for rid in affected:
             req = self._req_index.get(rid)
+            if (
+                req is not None
+                and req.phase is not Phase.FINISHED
+                and self._try_salvage(req, inst)
+            ):
+                salvaged.append(req)
+                continue
             self.pool.free_request(rid)
             if req is None or req.phase in (Phase.FINISHED,):
                 continue
             self._requeue_for_recompute(req)
             if req not in self.pending:
                 self.pending.append(req)
-        self._drop_request_state(affected)
+        keep = {r.rid for r in salvaged}
+        self._drop_request_state([rid for rid in affected if rid not in keep])
+        if salvaged:
+            self._launch_recovery(salvaged)
+
+    def _try_salvage(self, req: Request, inst: int) -> bool:
+        """Attempt KV salvage + scale-down resume for one request affected
+        by the failure of `inst`.  Base engines (the baselines) have no
+        recovery chain — always full recompute."""
+        return False
+
+    def _launch_recovery(self, reqs: List[Request]) -> None:
+        """Launch the recovery chain for this failure event's salvaged
+        requests (engine-specific; unreachable while `_try_salvage` says
+        no)."""
+        raise NotImplementedError
 
     def _apply_join(self, inst: int) -> None:
         if inst in self.failed:
@@ -439,11 +529,13 @@ class LoongServeEngine(BaseServingEngine):
         # or interleaved decode rows): the scheduler must not launch them in
         # a parallel decode group while the chain owns their iteration
         self._in_unified: Set[int] = set()
-        # in-flight chains' instance sets (id(work) -> instances): decode
-        # groups overlapping one wait in `ready_decode` for the chain's next
-        # chunk boundary and ride the fused iteration instead of launching a
-        # competing standalone iteration on the same instances
-        self._active_unified: Dict[int, Set[int]] = {}
+        # in-flight chains (id(work) -> the UnifiedWork): decode groups
+        # overlapping one wait in `ready_decode` for the chain's next chunk
+        # boundary and ride the fused iteration instead of launching a
+        # competing standalone iteration on the same instances; the failure
+        # path reaches in-flight rider groups through it for sub-mesh
+        # re-formation, and checkpoints round-trip it
+        self._active_unified: Dict[int, UnifiedWork] = {}
         self.executor = None
         if self.real:
             from repro.engine.executor import LocalExecutor, MeshExecutor
@@ -608,8 +700,8 @@ class LoongServeEngine(BaseServingEngine):
             if any(r.rid in self._in_unified for r in g.requests):
                 continue  # riding an in-flight unified chain this iteration
             if any(
-                set(g.instances) & insts
-                for insts in self._active_unified.values()
+                set(g.instances) & set(w.alive_instances(self.failed))
+                for w in self._active_unified.values()
             ):
                 # a unified chain owns (some of) these instances: hold the
                 # group in ready_decode so the chain absorbs it at its next
@@ -678,8 +770,13 @@ class LoongServeEngine(BaseServingEngine):
                 pause = self.dispatch_backoff * (2 ** attempt)
                 for i in instances:
                     if i not in self.failed:
+                        # seeded jitter in [0.5, 1.5) per instance so
+                        # simultaneous retries across a group don't
+                        # resynchronize into a retry storm; the dedicated
+                        # stream keeps same-seed chaos replay bit-for-bit
+                        jitter = 0.5 + self._backoff_rng.random()
                         self.busy_until[i] = (
-                            max(self.busy_until[i], self.clock) + pause
+                            max(self.busy_until[i], self.clock) + pause * jitter
                         )
         self.metrics.dispatch_declared_failures += 1
         victim = next((i for i in instances if i not in self.failed), None)
@@ -803,20 +900,42 @@ class LoongServeEngine(BaseServingEngine):
             )
         )
 
+    def _pending_spans(self, r: Request) -> List[Tuple[int, int]]:
+        """Ascending token spans this request still needs computed: a
+        recovering request's lost holes first (each must fully fill before
+        any later chunk runs, so prefix coverage below a chunk start stays
+        complete), then — unless it resumes straight into decode — the
+        normal prefill frontier ``[prefill_pos, input_len)``."""
+        rec = self._recovering.get(r.rid)
+        spans: List[Tuple[int, int]] = list(rec.spans) if rec is not None else []
+        if (
+            (rec is None or not rec.resume_decode)
+            and r.prefill_pos < r.input_len
+        ):
+            spans.append((r.prefill_pos, r.input_len))
+        return spans
+
     def _next_chunks(self, work: UnifiedWork) -> Dict[int, Tuple[int, int]]:
         """Chunk schedule for ONE chain link: walk the batch in order giving
         each unfinished prompt its next contiguous slice until the
         ``prefill_chunk_tokens`` budget runs out (the first prompt always
-        gets at least one token, so the chain advances)."""
-        budget = max(int(self.manager.mcfg.prefill_chunk_tokens), 1)
+        gets at least one token, so the chain advances).  A recovering
+        request's next slice comes from its first lost hole instead of the
+        frontier cursor (at most one hole span per request per link).  A
+        recovery chain on an engine without the chunking knob runs each
+        span whole."""
+        budget = self.manager.mcfg.prefill_chunk_tokens
+        budget = max(int(budget), 1) if budget is not None else (1 << 30)
         chunks: Dict[int, Tuple[int, int]] = {}
         for r in work.batch.requests:
-            if r.prefill_pos >= r.input_len:
+            spans = self._pending_spans(r)
+            if not spans:
                 continue
             if budget <= 0 and chunks:
                 break
-            ln = min(r.input_len - r.prefill_pos, max(budget, 1))
-            chunks[r.rid] = (r.prefill_pos, ln)
+            start, end = spans[0]
+            ln = min(end - start, max(budget, 1))
+            chunks[r.rid] = (start, ln)
             budget -= ln
         return chunks
 
@@ -856,7 +975,7 @@ class LoongServeEngine(BaseServingEngine):
             self._in_unified.add(r.rid)
         for r in dreqs:
             self._in_unified.add(r.rid)
-        self._active_unified[id(work)] = set(insts)
+        self._active_unified[id(work)] = work
         self._push(end, "unified_done", work)
 
     def _on_unified_done(self, work: UnifiedWork) -> None:
@@ -911,9 +1030,13 @@ class LoongServeEngine(BaseServingEngine):
         if not b.requests and not groups:
             return
         insts = work.alive_instances(self.failed)
-        ok = self._dispatch_with_retry(
-            lambda: self._real_unified(work), insts, "unified"
-        )
+        # sim-mode chains exist only as recovery chains (salvage works on
+        # pool bookkeeping alone); there is no executor to dispatch
+        ok = True
+        if self.real:
+            ok = self._dispatch_with_retry(
+                lambda: self._real_unified(work), insts, "unified"
+            )
         if not ok:
             # the fused step never ran: requeue the chunked prompts for
             # recompute and send surviving riders back to the ready queue
@@ -935,13 +1058,35 @@ class LoongServeEngine(BaseServingEngine):
         chunked = [r for r in b.requests if r.rid in work.chunks]
         survivors = self._drain_quarantine(chunked)
         completed = []
+        recovered = []
         for r in survivors:
             start, ln = work.chunks[r.rid]
+            rec = self._recovering.get(r.rid)
+            if rec is not None and rec.spans and rec.spans[0][0] == start:
+                # hole chunk: consume the lost span, not the frontier
+                # cursor — salvaged KV above the hole is already in place
+                _, e0 = rec.spans[0]
+                if start + ln >= e0:
+                    rec.spans.pop(0)
+                else:
+                    rec.spans[0] = (start + ln, e0)
+                if not rec.spans:
+                    self._recovering.pop(r.rid, None)
+                    if rec.resume_decode:
+                        # coverage is whole again: RESUMING -> running.
+                        # The request re-enters decode AT its cursor; hole
+                        # chunks never sample, so no token is emitted here
+                        r.phase = Phase.DECODE
+                        recovered.append(r)
+                continue
             r.prefill_pos = start + ln
             if r.prefill_pos >= r.input_len:
+                self._recovering.pop(r.rid, None)
                 r.prefill_end = self.clock
                 r.phase = Phase.DECODE
                 r.generated += 1  # the fused step emitted the first token
+                if not self.real:
+                    r.output_tokens.append(self._sample_token())
                 completed.append(r)
         for r in [q for q in completed if q.done]:
             self._finish_request(r)
@@ -961,6 +1106,16 @@ class LoongServeEngine(BaseServingEngine):
                 if insts_nd else {}
             )
             out_groups.append(DecodeBatch(new_dec, insts_nd, masters))
+        if recovered:
+            # resumed decode requests re-form as a group on the surviving
+            # sub-mesh (DoP-1): they ride the chain's next link as riders
+            # or dissolve into `ready_decode` with it
+            insts_rec = [i for i in b.instances if i not in self.failed]
+            masters = (
+                self.manager._assign_masters(recovered, insts_rec)
+                if insts_rec else {}
+            )
+            out_groups.append(DecodeBatch(recovered, insts_rec, masters))
         # ---- continue the chain while any prompt is mid-prefill
         remaining = [r for r in b.requests if r.phase is Phase.PREFILL]
         if remaining:
@@ -1199,35 +1354,207 @@ class LoongServeEngine(BaseServingEngine):
         if self.executor is not None and hasattr(self.executor, "_bind_pool_devices"):
             self.executor._bind_pool_devices()
 
+    # ------------------------------------------------ elastic fault recovery
+    def _try_salvage(self, req: Request, inst: int) -> bool:
+        """Elastic fault recovery (the paper's zero-migration scale-down
+        repurposed as the failure path): keep the surviving instances' KV
+        shards of `req` registered, re-reserve the dead rank's positions on
+        the survivors, and register a `RecoveryState` whose lost *computed*
+        spans the recovery chain re-prefills as hole chunks.  Recovery cost
+        is proportional to the lost stripe, not the request length.
+
+        Returns False — meaning the caller falls back to full recompute —
+        when nothing computed survives, when the request is already
+        mid-recovery (a double failure), when real mode lacks the unified
+        chunk machinery that drives hole re-prefill, or when the survivors
+        cannot hold the lost stripe."""
+        rid = req.rid
+        if rid in self._recovering:
+            return False  # second failure mid-recovery: full recompute
+        if req.phase is Phase.DECODE:
+            expected = req.seq_len - 1  # stored KV: positions 0..seq_len-2
+            cursor = expected
+            resume_decode = True
+        elif req.phase is Phase.PREFILL and req.prefill_pos > 0:
+            expected = req.input_len
+            cursor = req.prefill_pos  # positions >= cursor: reserved, unfilled
+            resume_decode = False
+        else:
+            return False  # nothing computed yet: requeueing loses nothing
+        if self.real and not (
+            self.executor is not None
+            and getattr(self.executor, "supports_unified", False)
+            and req.prompt is not None
+            and len(req.prompt) == req.input_len
+        ):
+            return False  # span re-prefill runs through the unified path
+        plan = self.pool.salvage_placement(rid, expected, self.failed)
+        filled = sum(int((p < cursor).sum()) for p in plan.coverage.values())
+        if filled == 0:
+            return False
+        lost = [p for s, e in plan.lost_spans for p in range(s, e)]
+        alive = [
+            i for i in range(min(self.n, len(self.pool.pools)))
+            if i not in self.failed
+        ]
+        try:
+            repl = (
+                self.pool.plan_placement(rid, lost, alive) if lost else None
+            )
+        except OutOfSlots:
+            return False  # survivors can't absorb the stripe
+        # ---- commit: the request is SALVAGING from here on
+        self.pool.pools[inst].free_request(rid)
+        if repl is not None:
+            # immediate re-reservation keeps the allocated coverage exactly
+            # {0..expected-1} throughout recovery (what relaxed I3 checks)
+            self.pool.place_salvage(repl)
+        self._detach_from_inflight(rid)
+        holes = [(s, min(e, cursor)) for s, e in plan.lost_spans if s < cursor]
+        self.metrics.salvaged_tokens += filled
+        self.metrics.recomputed_tokens += sum(e - s for s, e in holes)
+        req.phase = Phase.PREFILL
+        self._recovering[rid] = RecoveryState(
+            spans=holes, expected=expected,
+            resume_decode=resume_decode, salvaged=filled,
+        )
+        return True
+
+    def _detach_from_inflight(self, rid: int) -> None:
+        """Hand ownership of `rid`'s next iteration to the recovery chain:
+        delete it from every in-flight launch stamp so stale completions of
+        already-queued links/groups drop it (`.get(rid)` mismatches) instead
+        of advancing its cursor or decoding it a second time."""
+        for stamp in itertools.chain(
+            self._decode_launch_seq.values(),
+            self._prefill_launch_epoch.values(),
+        ):
+            stamp.pop(rid, None)
+        self._in_unified.discard(rid)
+        self._pending_kv.pop(rid, None)
+
+    def _launch_recovery(self, reqs: List[Request]) -> None:
+        """One recovery chain per failure event: the salvaged requests
+        re-form on the surviving sub-mesh (the union of instances still
+        holding their KV — the old group minus the dead rank, DoP-1) and
+        resume at their span/chunk cursors through the ordinary unified
+        chain machinery.  The batch placement is the live coverage map, so
+        hole-chunk KV scatters into the re-reserved slots."""
+        placement = {
+            r.rid: {
+                i: pos.tolist()
+                for i, pos in self.pool.coverage_map(
+                    r.rid, self.failed
+                ).items()
+            }
+            for r in reqs
+        }
+        insts = sorted({i for cov in placement.values() for i in cov})
+        if not insts:  # unreachable while _try_salvage demands coverage
+            for r in reqs:
+                self.pool.free_request(r.rid)
+                self._requeue_for_recompute(r)
+                if r not in self.pending:
+                    self.pending.append(r)
+            return
+        b = PrefillBatch(reqs, insts, insts, placement)
+        # failure can land mid-iteration: queue the chain behind whatever
+        # the surviving instances are already busy with
+        extra = max(
+            (max(0.0, self.busy_until[i] - self.clock) for i in insts),
+            default=0.0,
+        )
+        self._launch_unified(UnifiedWork(b, []), extra_delay=extra)
+
+    def _promote_masters(self, g: DecodeBatch) -> None:
+        """Master promotion: requests whose KV-append master died get a
+        fresh master among the group's surviving instances."""
+        orphans = [
+            r for r in g.requests if g.masters.get(r.rid) in self.failed
+        ]
+        if orphans and g.instances:
+            g.masters.update(
+                self.manager._assign_masters(orphans, g.instances)
+            )
+
     def _apply_failure(self, inst: int) -> None:
         super()._apply_failure(inst)
         # drop the failed instance's device KV mirror (a full pool-sized
         # copy) — it will be rebuilt from scratch if the instance rejoins
         if inst < len(self.pool.pools):
             self.pool.pools[inst].drop_mirror()
-        # purge requeued (now-PENDING) requests and the dead instance from
-        # waiting decode groups so they are not scheduled with freed KV
+        # evict compiled programs / mesh-cache entries that bake in the
+        # dead instance: surviving groups re-form at DoP-1 and compile
+        # fresh reduced-DoP programs on the sub-mesh
+        if self.executor is not None:
+            self.executor.on_instance_failed(inst)
+        # purge requeued (now-PENDING/-PREFILL) requests and the dead
+        # instance from waiting decode groups so they are not scheduled
+        # with freed KV; promote masters the failure orphaned
         for g in list(self.ready_decode):
             g.requests = [r for r in g.requests if r.phase is Phase.DECODE]
             g.instances = [i for i in g.instances if i not in self.failed]
             if not g.requests:
                 self.ready_decode.remove(g)
+                continue
+            self._promote_masters(g)
+        # in-flight chains: rider groups re-form on the surviving sub-mesh
+        # at their next link (the chain itself filters alive instances at
+        # every launch)
+        for w in self._active_unified.values():
+            for g in w.groups:
+                g.instances = [i for i in g.instances if i not in self.failed]
+                self._promote_masters(g)
 
     def _drop_request_state(self, rids) -> None:
         for rid in rids:
             self._real_cache.pop(rid, None)
 
     def _checkpoint_extra(self):
-        return {"ready_decode": self.ready_decode}
+        # launch-time consistency state is keyed by id() of the in-flight
+        # payload objects; persist it keyed by the OBJECTS themselves — the
+        # single pickle.dump shares identity with the copies inside
+        # `events`, so `_restore_extra` can rebuild the id()-keyed maps
+        # against the restored heap and an in-flight unified chain RESUMES
+        # at its chunk cursors instead of restarting
+        stamped = [
+            p for _, _, kind, p in self.events
+            if kind in ("prefill_done", "decode_done", "unified_done")
+        ]
+        return {
+            "ready_decode": self.ready_decode,
+            "in_unified": set(self._in_unified),
+            "recovering": dict(self._recovering),
+            "launch_stamps": [
+                (
+                    p,
+                    self._prefill_launch_epoch.get(id(p)),
+                    self._decode_launch_seq.get(id(p)),
+                    self._running_decode_ends.get(id(p)),
+                    id(p) in self._active_unified,
+                )
+                for p in stamped
+            ],
+        }
 
     def _restore_extra(self, extra) -> None:
-        if extra:
-            self.ready_decode = extra["ready_decode"]
-        # transient launch-time state is keyed by id() of pre-restore batch
-        # objects — drop it (in-flight completions fall back to the
-        # phase-only liveness filter)
         self._running_decode_ends = {}
         self._decode_launch_seq = {}
         self._prefill_launch_epoch = {}
         self._in_unified = set()
         self._active_unified = {}
+        self._recovering = {}
+        if not extra:
+            return
+        self.ready_decode = extra["ready_decode"]
+        self._in_unified = set(extra.get("in_unified", ()))
+        self._recovering = dict(extra.get("recovering", {}))
+        for p, epoch, seq, end, active in extra.get("launch_stamps", ()):
+            if epoch is not None:
+                self._prefill_launch_epoch[id(p)] = epoch
+            if seq is not None:
+                self._decode_launch_seq[id(p)] = seq
+            if end is not None:
+                self._running_decode_ends[id(p)] = end
+            if active:
+                self._active_unified[id(p)] = p

@@ -34,6 +34,30 @@ class PlacementPlan:
         return [i for i, toks in self.assignment.items() if toks]
 
 
+@dataclass
+class SalvagePlan:
+    """Fault-salvage inventory for one request after an instance died.
+
+    ``coverage`` is the sparse per-request coverage map over SURVIVING
+    instances (instance -> sorted positions still resident); ``lost_spans``
+    are the maximal contiguous runs of ``[0, expected)`` no survivor holds —
+    exactly the spans the recovery chain must re-prefill (the dead rank's
+    stripe), everything else is salvaged in place."""
+
+    request_id: int
+    expected: int
+    coverage: Dict[int, np.ndarray]
+    lost_spans: List[Tuple[int, int]]
+
+    @property
+    def n_salvaged(self) -> int:
+        return sum(len(p) for p in self.coverage.values())
+
+    @property
+    def n_lost(self) -> int:
+        return sum(e - s for s, e in self.lost_spans)
+
+
 class DistributedKVPool:
     def __init__(self, cfg: ModelConfig, n_instances: int,
                  capacity_per_instance: int, store_values: bool = True,
@@ -160,6 +184,52 @@ class DistributedKVPool:
                 self.pools[inst].write(
                     plan.request_id, toks, k[:, cols], v[:, cols]
                 )
+
+    # ---------------------------------------------------------------- salvage
+    def coverage_map(
+        self, request_id: int, failed: Sequence[int] = ()
+    ) -> Dict[int, np.ndarray]:
+        """Sparse per-request coverage over surviving instances: instance ->
+        sorted global positions resident there (empty legs omitted)."""
+        out: Dict[int, np.ndarray] = {}
+        for p in self.pools:
+            if p.instance_id in failed:
+                continue
+            pos = p.positions_of(request_id)
+            if len(pos):
+                out[p.instance_id] = pos
+        return out
+
+    def salvage_placement(
+        self, request_id: int, expected: int, failed: Sequence[int]
+    ) -> SalvagePlan:
+        """Plan elastic fault recovery for one request: what the survivors
+        still hold of positions ``[0, expected)`` and which contiguous spans
+        died with the failed instance(s).  Pure inventory — re-reserving the
+        lost spans is `place_salvage`, recomputing them is the engine's
+        recovery chain."""
+        cov = self.coverage_map(request_id, failed)
+        mask = np.ones(max(expected, 0), bool)
+        for pos in cov.values():
+            held = pos[pos < expected]
+            mask[held] = False
+        missing = np.nonzero(mask)[0]
+        spans: List[Tuple[int, int]] = []
+        if len(missing):
+            brk = np.nonzero(np.diff(missing) > 1)[0]
+            starts = np.concatenate([missing[:1], missing[brk + 1]])
+            ends = np.concatenate([missing[brk], missing[-1:]]) + 1
+            spans = [(int(s), int(e)) for s, e in zip(starts, ends)]
+        return SalvagePlan(request_id, expected, cov, spans)
+
+    def place_salvage(self, plan: PlacementPlan) -> None:
+        """Re-reserve a dead rank's positions on the survivors.  Unlike
+        `place`, the targets may already hold HIGHER positions of the same
+        request, so each leg goes through `insert_positions` (which restores
+        the pool's position-ascending local order)."""
+        for inst, toks in plan.assignment.items():
+            if toks:
+                self.pools[inst].insert_positions(plan.request_id, toks)
 
     # -------------------------------------------------------------- migration
     def migrate_request(

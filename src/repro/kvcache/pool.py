@@ -327,6 +327,48 @@ class KVPool:
         self._used_tokens -= n_drop
         return n_drop
 
+    def positions_of(self, request_id: int) -> np.ndarray:
+        """Sorted global positions this pool holds for `request_id` (the
+        instance's leg of a sparse coverage map; empty when absent)."""
+        st = self._reqs.get(request_id)
+        if st is None:
+            return np.empty(0, np.int64)
+        return np.sort(st.pos[: st.n_tok].copy())
+
+    def insert_positions(self, request_id: int, positions: Sequence[int]) -> List[int]:
+        """Reserve positions that may PRECEDE positions the request already
+        holds here (fault salvage re-reserves a dead rank's stripe on the
+        survivors, whose own stripes sit at higher positions).  `alloc`
+        appends, which would break the position-ascending local order
+        `prefix_block_table` relies on; this restores it by permuting the
+        request's local indices — and the stored KV with them — after the
+        append.  The inserted slots hold no KV yet: the recovery chain
+        fills them through the usual `slots_for` + fill paths."""
+        pos = np.sort(np.asarray(positions, np.int64))
+        if len(pos) == 0:
+            return []
+        st = self._reqs.get(request_id)
+        if st is None or st.n_tok == 0 or int(pos[0]) > st.max_pos:
+            return self.alloc(request_id, pos)  # plain append stays sorted
+        if self.store_values:
+            self._sync_host()  # the permutation moves host KV between slots
+        self.alloc(request_id, pos)
+        st = self._reqs[request_id]
+        cur = st.pos[: st.n_tok].copy()
+        order = np.argsort(cur, kind="stable")
+        slots = self.slots_of_state(st)
+        moved = order != np.arange(st.n_tok)
+        if self.store_values and moved.any():
+            # fancy-index gather materializes the RHS first, so overlapping
+            # src/dst slot sets are safe; local index j takes the KV that
+            # lived at local index order[j]
+            self.k[:, slots[moved]] = self.k[:, slots[order[moved]]]
+            self.v[:, slots[moved]] = self.v[:, slots[order[moved]]]
+            self._mark_dirty(slots[moved])
+        st.pos[: st.n_tok] = cur[order]
+        self.slot_pos[slots] = cur[order]
+        return slots[np.searchsorted(cur[order], pos)].tolist()
+
     # ------------------------------------------------------------------ data
     def _mark_dirty(self, slots: np.ndarray) -> None:
         if self._dirty_full or len(slots) == 0:

@@ -1,0 +1,329 @@
+"""Elastic fault recovery: KV salvage + scale-down resume (ISSUE 10).
+
+Covers the salvage primitives (sparse coverage maps, mid-stripe position
+insertion with KV permutation, salvage planning), the engine recovery
+path (mid-chain instance failure at DoP 2 and 4 with bit-for-bit oracle
+parity and per-request recompute bounded by the lost stripe), decode-phase
+salvage accounting in sim mode, the `salvage_ratio` metric, deterministic
+backoff jitter, the invariant-checker sampling knob, and checkpoint /
+restore while a unified chain is in flight (resume, not restart)."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced
+from repro.engine.invariants import InvariantChecker
+from repro.engine.request import Phase, Request
+from repro.engine.server import EngineMetrics, LoongServeEngine
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kvcache.distributed import DistributedKVPool
+from repro.kvcache.pool import KVPool
+from repro.manager.scheduler import ManagerConfig
+from repro.models import build_model
+
+CFG = reduced(REGISTRY["lwm-7b"])
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ----------------------------------------------------------- pool primitives
+def _pos_coded(pool, positions):
+    """KV whose every column encodes its global position (k[., j] == pos)."""
+    shape = (pool.n_attn, len(positions)) + pool.k.shape[2:]
+    k = np.broadcast_to(
+        np.asarray(positions, np.float32)[None, :, None, None], shape
+    ).copy()
+    return k, -k
+
+
+def test_insert_positions_restores_local_order_and_kv():
+    pool = KVPool(CFG, 64, 0, True, 1)
+    lo, hole, hi = [0, 1, 2], [3, 4, 5, 6], [7, 8, 9]
+    for part in (lo, hi):
+        pool.write(5, part, *_pos_coded(pool, part))
+    # the hole PRECEDES already-held positions: plain alloc would append it
+    # after `hi` and break the position-ascending local order
+    slots = pool.insert_positions(5, hole)
+    assert len(slots) == len(hole)
+    assert np.array_equal(pool.positions_of(5), np.arange(10))
+    # local order really is position-ascending again (prefix_block_table
+    # asserts it internally for every prefix limit)
+    for lim in (3, 5, 10):
+        pool.prefix_block_table([5], np.array([lim]))
+    # surviving KV moved WITH its positions during the permutation; the
+    # inserted slots are reserved-but-empty, filled like any placement
+    pool.fill(5, hole, *_pos_coded(pool, hole))
+    positions, k, _ = pool.gather(5)
+    assert np.array_equal(positions, np.arange(10))
+    assert np.array_equal(k[0, :, 0, 0], np.arange(10, dtype=np.float32))
+
+
+def test_insert_positions_append_fast_path():
+    pool = KVPool(CFG, 64, 0, False, 1)
+    pool.alloc(7, [0, 1, 2])
+    pool.insert_positions(7, [3, 4])  # strictly above max_pos: plain append
+    assert np.array_equal(pool.positions_of(7), np.arange(5))
+    assert pool.insert_positions(7, []) == []
+
+
+def test_salvage_placement_inventory_and_replacement():
+    pool = DistributedKVPool(CFG, 3, 64, store_values=False)
+    for i in range(3):  # contiguous stripes: inst i holds [10i, 10i+10)
+        pool.pools[i].alloc(5, range(10 * i, 10 * i + 10))
+    plan = pool.salvage_placement(5, 30, failed={1})
+    assert plan.lost_spans == [(10, 20)]
+    assert plan.n_salvaged == 20 and plan.n_lost == 10
+    assert set(plan.coverage) == {0, 2}
+    assert np.array_equal(plan.coverage[0], np.arange(10))
+    # re-reserve the dead stripe on the survivors -> full coverage again
+    repl = pool.plan_placement(5, list(range(10, 20)), [0, 2])
+    pool.place_salvage(repl)
+    cov = pool.coverage_map(5, failed={1})
+    assert np.array_equal(
+        np.sort(np.concatenate(list(cov.values()))), np.arange(30)
+    )
+    for inst, pos in cov.items():  # every leg stays locally sorted
+        assert np.array_equal(pos, np.sort(pos))
+
+
+def test_salvage_placement_interleaved_stripes():
+    pool = DistributedKVPool(CFG, 2, 64, store_values=False)
+    pool.pools[0].alloc(9, range(0, 12, 2))   # even positions
+    pool.pools[1].alloc(9, range(1, 12, 2))   # odd positions
+    plan = pool.salvage_placement(9, 12, failed={0})
+    assert plan.lost_spans == [(p, p + 1) for p in range(0, 12, 2)]
+    assert plan.n_salvaged == 6 and plan.n_lost == 6
+    # no failure -> nothing lost
+    assert pool.salvage_placement(9, 12, failed=set()).lost_spans == []
+
+
+# ------------------------------------------------- engine recovery, real mode
+def _salvage_workload(rng, n_short=3, long_len=240):
+    reqs = []
+    for _ in range(n_short):
+        ln = int(rng.integers(20, 30))
+        reqs.append(Request(
+            input_len=ln, max_new_tokens=8, arrival=0.0,
+            prompt=rng.integers(0, CFG.vocab_size, ln).tolist(),
+        ))
+    reqs.append(Request(
+        input_len=long_len, max_new_tokens=4, arrival=0.03,
+        prompt=rng.integers(0, CFG.vocab_size, long_len).tolist(),
+    ))
+    return reqs
+
+
+# (group DoP, engine instances, per-instance capacity, long prompt).  The
+# long prompt exceeds (dop-1) instances' capacity, so the proactive
+# scale-down placement MUST stripe it over `dop` instances; the engine is
+# larger than the group so the survivors + bystanders can absorb a lost
+# stripe's re-reservation.
+_TOPOLOGIES = [(2, 3, 220, 300), (4, 6, 170, 560)]
+
+
+@pytest.mark.parametrize("dop,n,cap,long_len", _TOPOLOGIES)
+def test_mid_chain_failure_salvage_parity(model_params, dop, n, cap, long_len):
+    """Single-instance failure mid-unified-chain at DoP 2 / 4: survivors'
+    KV is salvaged, each salvaged request recomputes at most its lost
+    stripe (strictly less than seq_len), final tokens are bit-for-bit the
+    no-failure serial oracle, and the sanitizer stays green throughout."""
+    model, params = model_params
+    rng = np.random.default_rng(29)
+    reqs = _salvage_workload(rng, long_len=long_len)
+    eng = LoongServeEngine(
+        CFG, n, cap, store_values=True, model=model, params=params,
+        mcfg=ManagerConfig(prefill_chunk_tokens=48),
+    )
+    chk = InvariantChecker(eng)
+    chk.arm()
+    rs = copy.deepcopy(reqs)
+    for r in rs:
+        eng.submit(r)
+    long_r = rs[-1]
+    # run until the long prompt is striped over `dop` instances and deep
+    # enough into its chain that EVERY stripe holds computed tokens (so a
+    # failure of any holder leaves salvageable survivor KV), with the next
+    # link in flight (failure lands mid-chain)
+    guard = 0
+    while not (
+        long_r.phase is Phase.PREFILL
+        and long_r.prefill_pos >= int(0.8 * long_len)
+        and len(eng.pool.request_instances(long_r.rid)) >= dop
+        and any(e[2] == "unified_done" for e in eng.events)
+    ):
+        assert eng.events and guard < 2000, "never reached a striped mid-chain"
+        eng.run(max_events=1)
+        guard += 1
+    victim = eng.pool.request_instances(long_r.rid)[0]
+    held = {
+        rid: len(eng.pool.pools[victim].tokens_of(rid))
+        for rid in eng.pool.pools[victim].requests()
+    }
+    eng.fail_instance(victim)
+    eng.run(max_events=1)  # the fail event is next (pushed at eng.clock)
+    rec = dict(eng._recovering)
+    assert long_r.rid in rec, "mid-chain failure did not salvage the chain"
+    for rid, st in rec.items():
+        lost = sum(e - s for s, e in st.spans)
+        assert lost <= held.get(rid, 0), (rid, st.spans, held)
+        assert st.salvaged > 0
+    m = eng.run()
+    assert len(m.finished) == len(rs)
+    assert eng.metrics.salvaged_tokens > 0
+    assert eng.metrics.recomputed_tokens < sum(r.seq_len for r in rs)
+    assert not eng._recovering  # exact coverage again at completion
+    assert chk.leaked_slots() == 0
+    assert eng.pool.total_used == 0
+    for orig, r in zip(reqs, rs):  # originals: folding mutates rs prompts
+        want = kref.serial_decode_oracle(
+            model, params, orig.prompt, orig.max_new_tokens - 1
+        )
+        assert want == r.output_tokens, (dop, r.rid, want, r.output_tokens)
+
+
+def test_decode_phase_salvage_sim_accounting():
+    """Failure during decode: the whole prefix {0..seq_len-2} minus the
+    dead stripe is salvaged, the request resumes decode after the hole
+    re-prefills, and the accounting splits salvaged vs recomputed."""
+    # per-instance capacity (100) < input_len (150): the token-granularity
+    # placement MUST stripe each request across instances, so a failure
+    # always leaves salvageable survivor shards
+    eng = LoongServeEngine(CFG, 3, 100)
+    reqs = [
+        Request(input_len=150, max_new_tokens=10, arrival=0.0)
+        for _ in range(2)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    guard = 0
+    while not any(
+        r.phase is Phase.DECODE and r.generated >= 2 for r in reqs
+    ):
+        assert eng.events and guard < 800, "no request reached decode"
+        eng.run(max_events=1)
+        guard += 1
+    victim_req = next(
+        r for r in reqs if r.phase is Phase.DECODE and r.generated >= 2
+    )
+    insts = eng.pool.request_instances(victim_req.rid)
+    assert len(insts) >= 2, insts  # striped: survivors will hold shards
+    victim = next(i for i in insts if i not in eng.failed)
+    survivors_hold = sum(
+        len(p)
+        for i, p in eng.pool.coverage_map(victim_req.rid, {victim}).items()
+    )
+    victim_holds = len(eng.pool.pools[victim].tokens_of(victim_req.rid))
+    eng.fail_instance(victim)
+    eng.run(max_events=1)
+    rec = eng._recovering.get(victim_req.rid)
+    assert rec is not None and rec.resume_decode
+    assert rec.expected == rec.salvaged + sum(e - s for s, e in rec.spans)
+    assert eng.metrics.salvaged_tokens >= survivors_hold
+    assert eng.metrics.recomputed_tokens <= victim_holds
+    m = eng.run()
+    assert len(m.finished) == len(reqs)
+    assert all(r.generated == r.max_new_tokens for r in reqs)
+    assert eng.pool.total_used == 0
+    snap = eng.metrics.snapshot()
+    assert snap["salvage_ratio"] > 0
+
+
+# --------------------------------------------------------- metrics & knobs
+def test_metrics_snapshot_salvage_ratio():
+    m = EngineMetrics()
+    assert m.snapshot()["salvage_ratio"] == 0.0  # no faults: defined as 0
+    m.salvaged_tokens, m.recomputed_tokens = 30, 10
+    assert m.snapshot()["salvage_ratio"] == pytest.approx(0.75)
+    assert m.summary()["salvaged_tokens"] == 30
+    assert "salvage_ratio" not in m.summary()  # ratio is snapshot-only
+
+
+def test_backoff_jitter_deterministic_per_seed():
+    a, b = (LoongServeEngine(CFG, 2, 500, seed=5) for _ in range(2))
+    sa = [a._backoff_rng.random() for _ in range(16)]
+    assert sa == [b._backoff_rng.random() for _ in range(16)]
+    assert all(0.0 <= x < 1.0 for x in sa)  # jitter factor is 0.5 + this
+    c = LoongServeEngine(CFG, 2, 500, seed=6)
+    assert [c._backoff_rng.random() for _ in range(16)] != sa
+    # the jitter stream is SEPARATE from the sim token stream: draining it
+    # must not shift the tokens a same-seed engine generates
+    assert a.rng.random() == b.rng.random()
+
+
+def test_invariant_checker_sampling_knob():
+    with pytest.raises(AssertionError):
+        InvariantChecker(LoongServeEngine(CFG, 2, 1000), check_every_n=0)
+    eng = LoongServeEngine(CFG, 2, 2000)
+    full = InvariantChecker(eng)
+    sampled = InvariantChecker(eng, check_every_n=7)
+    full.arm()
+    sampled.arm()
+    for _ in range(3):
+        eng.submit(Request(input_len=40, max_new_tokens=6, arrival=0.0))
+    eng.run()
+    assert full.checks > 7  # default: after every handled event
+    assert sampled.checks == full.checks // 7  # same event stream, sampled
+    # manual checks are never sampled
+    before = sampled.checks
+    sampled.check()
+    assert sampled.checks == before + 1
+
+
+# ------------------------------------------------ checkpoint mid-chain resume
+def test_checkpoint_restore_mid_unified_chain_resumes(model_params, tmp_path):
+    """Checkpoint while a unified chain is in flight: the chunk cursors and
+    the `_active_unified` registry round-trip, and the restored engine
+    RESUMES the chain at its cursor (dispatching only the remaining spans)
+    with oracle token parity."""
+    model, params = model_params
+    rng = np.random.default_rng(31)
+    reqs = _salvage_workload(rng, n_short=2, long_len=200)
+    mk = lambda: LoongServeEngine(
+        CFG, 2, 600, store_values=True, model=model, params=params,
+        mcfg=ManagerConfig(prefill_chunk_tokens=32),
+    )
+    eng = mk()
+    rs = copy.deepcopy(reqs)
+    for r in rs:
+        eng.submit(r)
+    long_r = rs[-1]
+    guard = 0
+    while not (
+        long_r.phase is Phase.PREFILL
+        and 0 < long_r.prefill_pos < long_r.input_len
+        and any(e[2] == "unified_done" for e in eng.events)
+    ):
+        assert eng.events and guard < 1000, "never caught the chain mid-link"
+        eng.run(max_events=1)
+        guard += 1
+    cursor = long_r.prefill_pos
+    path = str(tmp_path / "mid_chain.ckpt")
+    eng.checkpoint(path)
+
+    eng2 = mk()
+    eng2.restore(path)
+    assert eng2._active_unified, "in-flight chain registry did not round-trip"
+    r2 = eng2._req_index[long_r.rid]
+    assert r2.prefill_pos == cursor  # chunk cursor survived the round-trip
+    assert any(e[2] == "unified_done" for e in eng2.events)
+    ops.reset_dispatch_counts()
+    m = eng2.run()
+    assert len(m.finished) == len(rs)
+    # resume, not restart: everything already prefilled before the
+    # checkpoint is NOT re-dispatched (the in-flight link and all later
+    # ones are; `cursor` tokens of the long prompt are not)
+    total_input = sum(r.input_len for r in rs)
+    assert ops.dispatch_counts["unified_prefill_tokens"] <= total_input - cursor
+    for orig, r in zip(reqs, (eng2._req_index[x.rid] for x in rs)):
+        want = kref.serial_decode_oracle(
+            model, params, orig.prompt, orig.max_new_tokens - 1
+        )
+        assert want == r.output_tokens, (r.rid, want, r.output_tokens)
